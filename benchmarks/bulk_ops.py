@@ -1,0 +1,69 @@
+"""Filter data-plane microbenchmarks: JAX bulk ops + Pallas-vs-ref probes.
+
+These are the TPU-adaptation numbers (DESIGN.md §2): vectorized bulk
+lookup/insert throughput and the optimistic parallel-insert coverage.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import filter as jf
+from repro.core import hashing
+from repro.kernels import ops
+
+
+def _pair(rng, n):
+    keys = rng.randint(0, 2 ** 63, size=n, dtype=np.int64).astype(np.uint64)
+    hi, lo = hashing.key_to_u32_pair_np(keys)
+    return jnp.asarray(hi), jnp.asarray(lo)
+
+
+def _time(f, *a, reps=5, **kw):
+    f(*a, **kw)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        r = f(*a, **kw)
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / reps
+
+
+def run():
+    rows = []
+    rng = np.random.RandomState(0)
+    n_buckets, n = 1 << 15, 1 << 16
+    hi, lo = _pair(rng, n)
+    st = jf.make_state(n_buckets, 4)
+    st, ok = jf.bulk_insert_hybrid(st, hi, lo, fp_bits=16)
+
+    t = _time(jf.bulk_lookup, st, hi, lo, fp_bits=16)
+    rows.append(("bulk_lookup_jax", t / n * 1e6, int(n / t)))
+
+    t = _time(ops.filter_lookup, st.table, hi, lo, fp_bits=16,
+              use_pallas="always")
+    rows.append(("bulk_lookup_pallas_interp", t / n * 1e6, int(n / t)))
+
+    t = _time(ops.hash_keys, hi, lo, fp_bits=16, n_buckets=n_buckets)
+    rows.append(("fingerprint_kernel", t / n * 1e6, int(n / t)))
+
+    # insert strategies at 50% load into fresh tables
+    def seq_insert():
+        s, _ = jf.bulk_insert(jf.make_state(n_buckets, 4), hi, lo, fp_bits=16)
+        return s.table
+
+    def par_insert():
+        s, placed = jf.parallel_insert_once(jf.make_state(n_buckets, 4), hi,
+                                            lo, fp_bits=16)
+        return placed
+
+    t = _time(seq_insert, reps=2)
+    rows.append(("bulk_insert_scan", t / n * 1e6, int(n / t)))
+    t = _time(par_insert, reps=3)
+    placed = jf.parallel_insert_once(jf.make_state(n_buckets, 4), hi, lo,
+                                     fp_bits=16)[1]
+    cov = float(jnp.mean(placed))
+    rows.append(("parallel_insert_once", t / n * 1e6, round(cov, 4)))
+    return rows

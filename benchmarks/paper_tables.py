@@ -1,0 +1,119 @@
+"""Benchmarks reproducing the paper's Table I, Fig. 2 and Fig. 3.
+
+Scaled to CI time (100k keys instead of 1M by default; pass --full for the
+paper's sizes).  Outputs CSV rows ``name,us_per_call,derived`` (derived
+carries the table's own quantity — occupancy, false positives, bytes, …).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import OCF, OcfConfig, PyCuckooFilter
+from repro.core.metrics import measure_false_positives
+
+
+def _keys(rng, n):
+    return rng.randint(0, 2 ** 63, size=n, dtype=np.int64).astype(np.uint64)
+
+
+def table1_occupancy_and_fp(n_keys: int = 100_000, batch: int = 4096):
+    """Paper Table I: occupancy + avg false positives, EOF vs PRE.
+
+    The paper inserts 1M keys and reports EOF occupancy 0.74 vs PRE 0.47
+    (PRE pre-allocates ~2x) and avg FPs 49 (EOF) vs 32 (PRE) per 1M-key
+    probe set.  We reproduce the *relationships*: EOF denser than PRE,
+    PRE slightly fewer FPs, both well under 0.1% FP rate.
+    """
+    rows = []
+    rng = np.random.RandomState(0)
+    keys = _keys(rng, n_keys)
+    probes = _keys(rng, n_keys)
+    for mode in ("EOF", "PRE"):
+        ocf = OCF(OcfConfig(capacity=2 * batch, mode=mode))
+        t0 = time.perf_counter()
+        for i in range(0, n_keys, batch):
+            ocf.insert(keys[i:i + batch])
+        dt = time.perf_counter() - t0
+        fps = measure_false_positives(ocf, probes)
+        rows.append((f"table1_{mode.lower()}_occupancy",
+                     dt / max(1, n_keys) * 1e6, round(ocf.occupancy, 4)))
+        rows.append((f"table1_{mode.lower()}_false_positives",
+                     dt / max(1, n_keys) * 1e6, fps))
+        rows.append((f"table1_{mode.lower()}_capacity",
+                     dt / max(1, n_keys) * 1e6, ocf.capacity))
+    return rows
+
+
+def fig2_throughput(rounds: int = 40, burst: int = 2048):
+    """Paper Fig. 2: sustained insert bursts — EOF, PRE and the unmanaged
+    cuckoo filter.  The unmanaged filter saturates within the first trials
+    (insert failures); EOF and PRE keep absorbing the burst.
+    """
+    rows = []
+    rng = np.random.RandomState(1)
+    for mode in ("EOF", "PRE"):
+        ocf = OCF(OcfConfig(capacity=2 * burst, mode=mode))
+        inserted = 0
+        t0 = time.perf_counter()
+        for r in range(rounds):
+            ocf.insert(_keys(rng, burst))
+            inserted += burst
+        dt = time.perf_counter() - t0
+        rows.append((f"fig2_{mode.lower()}_throughput_keys_per_s",
+                     dt / inserted * 1e6, int(inserted / dt)))
+        rows.append((f"fig2_{mode.lower()}_final_capacity",
+                     dt / inserted * 1e6, ocf.capacity))
+    # unmanaged traditional cuckoo filter: fixed capacity
+    f = PyCuckooFilter(n_buckets=burst // 2, bucket_size=4, fp_bits=16)
+    fail_round = None
+    t0 = time.perf_counter()
+    for r in range(rounds):
+        ok = f.bulk_insert(_keys(rng, burst))
+        if not ok.all():
+            fail_round = r
+            break
+    dt = time.perf_counter() - t0
+    rows.append(("fig2_unmanaged_saturates_at_round",
+                 dt / max(1, (fail_round or rounds) * burst) * 1e6,
+                 fail_round if fail_round is not None else -1))
+    return rows
+
+
+def fig3_size_trendlines(rounds: int = 30, burst: int = 2048):
+    """Paper Fig. 3: capacity trendlines — PRE grows ~2x beyond need while
+    EOF tracks the optimal size.  Derived value: final PRE/EOF capacity
+    ratio (>1 reproduces the paper's memory story) and mean occupancy.
+    """
+    rng = np.random.RandomState(2)
+    caps = {}
+    occs = {}
+    for mode in ("EOF", "PRE"):
+        ocf = OCF(OcfConfig(capacity=2 * burst, mode=mode))
+        t0 = time.perf_counter()
+        for r in range(rounds):
+            ocf.insert(_keys(rng, burst))
+            # mixed churn in later rounds (deletes shrink)
+            if r > rounds // 2:
+                ocf.delete(_keys(rng, burst // 4))  # mostly blind -> blocked
+        caps[mode] = ocf.capacity_history
+        occs[mode] = ocf.occupancy
+        dt = time.perf_counter() - t0
+    ratio = caps["PRE"][-1] / caps["EOF"][-1]
+    return [
+        ("fig3_pre_over_eof_capacity_ratio", 0.0, round(ratio, 3)),
+        ("fig3_eof_final_occupancy", 0.0, round(occs["EOF"], 4)),
+        ("fig3_pre_final_occupancy", 0.0, round(occs["PRE"], 4)),
+        ("fig3_eof_resizes", 0.0, len(caps["EOF"]) - 1),
+        ("fig3_pre_resizes", 0.0, len(caps["PRE"]) - 1),
+    ]
+
+
+def run(full: bool = False):
+    rows = []
+    n = 1_000_000 if full else 100_000
+    rows += table1_occupancy_and_fp(n_keys=n)
+    rows += fig2_throughput(rounds=100 if full else 40)
+    rows += fig3_size_trendlines(rounds=60 if full else 30)
+    return rows

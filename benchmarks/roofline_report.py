@@ -1,0 +1,72 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from artifacts/dryrun.
+
+Also exposes ``rows()`` for benchmarks.run (CSV deliverable d: one derived
+metric per dry-run cell).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load(art_dir: str = ART):
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(fn) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def rows(art_dir: str = ART):
+    out = []
+    for r in load(art_dir):
+        if r.get("knobs", {}).get("tagged"):
+            continue
+        name = f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}"
+        out.append((name, r["step_time_est"] * 1e6,
+                    f"bn={r['bottleneck']};mfu={r['mfu']:.3f}"))
+    return out
+
+
+def markdown_table(recs, mesh: str = "single") -> str:
+    hdr = ("| arch | shape | Tc (s) | Tm (s) | Tx (s) | bottleneck | "
+           "MODEL_FLOPs | useful | est-MFU |\n"
+           "|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in recs:
+        if r["mesh"] != mesh or r.get("tag"):
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute']:.4f} | "
+            f"{r['t_memory']:.4f} | {r['t_collective']:.4f} | "
+            f"{r['bottleneck']} | {r['model_flops']:.3e} | "
+            f"{r['useful_ratio']:.3f} | {r['mfu']:.3f} |")
+    return "\n".join(lines)
+
+
+def memory_table(recs) -> str:
+    hdr = ("| arch | shape | mesh | args GB/dev | temps GB/dev | "
+           "collectives | compile s |\n|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in recs:
+        ms = r.get("memory_stats") or {}
+        arg = (ms.get("argument_bytes") or 0) / 2 ** 30
+        tmp = (ms.get("temp_bytes") or 0) / 2 ** 30
+        nc = (r.get("collectives") or {}).get("count", 0)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {arg:.2f} | "
+            f"{tmp:.2f} | {nc} | {r.get('t_compile_s', 0)} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    recs = load()
+    print("## single-pod roofline\n")
+    print(markdown_table(recs, "single"))
+    print("\n## multi-pod roofline\n")
+    print(markdown_table(recs, "multi"))
+    print("\n## memory / collectives\n")
+    print(memory_table(recs))

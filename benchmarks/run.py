@@ -1,0 +1,37 @@
+"""Benchmark harness — one section per paper table/figure + system benches.
+
+Prints ``name,us_per_call,derived`` CSV (deliverable d).  Sections:
+  table1_*   — paper Table I (occupancy + false positives, EOF vs PRE)
+  fig2_*     — paper Fig. 2 (burst-insert throughput, incl. unmanaged filter)
+  fig3_*     — paper Fig. 3 (capacity trendlines, PRE/EOF ratio)
+  bulk_*     — TPU-adapted filter data-plane microbenches
+  prefix_* / ocf_* — serving-path OCF integration
+  roofline_* — per (arch x shape x mesh) dry-run roofline summary (if
+               artifacts/dryrun has been populated by launch/dryrun.py)
+"""
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sizes (1M keys)")
+    ap.add_argument("--skip-roofline", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks import bulk_ops, paper_tables, serving_bench
+
+    rows = []
+    rows += paper_tables.run(full=args.full)
+    rows += bulk_ops.run()
+    rows += serving_bench.run()
+    if not args.skip_roofline:
+        from benchmarks import roofline_report
+        rows += roofline_report.rows()
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.3f},{derived}")
+
+
+if __name__ == '__main__':
+    main()

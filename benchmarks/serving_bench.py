@@ -1,0 +1,43 @@
+"""Serving-path benchmark: OCF prefix-index ops at request rates + the
+distributed membership service microbenchmark."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import OCF, OcfConfig
+from repro.serving.kvcache import PrefixCacheIndex
+
+
+def run():
+    rows = []
+    rng = np.random.RandomState(0)
+
+    # prefix-index ops at serving rates
+    idx = PrefixCacheIndex(block=64)
+    prompts = [rng.randint(0, 32000, 2048).astype(np.int32)
+               for _ in range(64)]
+    t0 = time.perf_counter()
+    for p in prompts:
+        idx.admit(p)
+    t_admit = (time.perf_counter() - t0) / len(prompts)
+    t0 = time.perf_counter()
+    for p in prompts:
+        idx.match_prefix(p)
+    t_match = (time.perf_counter() - t0) / len(prompts)
+    rows.append(("prefix_admit_per_request", t_admit * 1e6, idx.ocf.capacity))
+    rows.append(("prefix_match_per_request", t_match * 1e6,
+                 round(idx.hit_rate, 3)))
+
+    # bursty lookup stream against one OCF node (the paper's workload)
+    ocf = OCF(OcfConfig(capacity=1 << 14, mode="EOF"))
+    keys = rng.randint(0, 2 ** 63, size=1 << 15,
+                       dtype=np.int64).astype(np.uint64)
+    ocf.insert(keys)
+    q = rng.permutation(np.concatenate([keys, keys]))[: 1 << 15]
+    t0 = time.perf_counter()
+    hits = ocf.lookup(q)
+    dt = time.perf_counter() - t0
+    rows.append(("ocf_lookup_stream", dt / q.size * 1e6, int(hits.sum())))
+    return rows

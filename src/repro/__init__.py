@@ -1,0 +1,2 @@
+"""repro: OCF (Optimized Cuckoo Filter) inside a multi-pod JAX LM framework."""
+__version__ = "1.0.0"

@@ -1,0 +1,2 @@
+from repro.checkpoint.ckpt import (AsyncCheckpointer, latest_step, restore,
+                                   restore_ocf, save)

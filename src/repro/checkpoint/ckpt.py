@@ -1,0 +1,145 @@
+"""Atomic, restart-safe checkpointing for params/opt/filter state.
+
+Layout:  <dir>/step_<n>.tmp/  -> fsync'd .npy per leaf + manifest.json
+         atomically renamed to <dir>/step_<n>/ (crash mid-write leaves only
+         a .tmp that restore ignores).  An optional background thread makes
+         saves asynchronous (training never blocks on disk).  The OCF state
+         (table + keystore) checkpoints alongside the model so a restarted
+         node resumes with its membership filter intact — the paper's
+         "avoid complete rebuild of in-memory structures on flush" goal,
+         applied to restarts.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.core.ocf import OCF
+
+
+def _flatten(tree) -> dict[str, Any]:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return {jax.tree_util.keystr(k): v for k, v in flat}, treedef
+
+
+def save(ckpt_dir: str, step: int, tree, *, ocf: Optional[OCF] = None,
+         extra: Optional[dict] = None) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat, _ = _flatten(tree)
+    names = {}
+    for i, (k, v) in enumerate(sorted(flat.items())):
+        fn = f"leaf_{i:05d}.npy"
+        arr = np.asarray(v)
+        dtype_name = str(arr.dtype)
+        if arr.dtype.kind == "V" or dtype_name == "bfloat16":
+            # ml_dtypes (bfloat16, fp8) do not survive .npy — store the raw
+            # bits as uint16/uint8 and record the logical dtype.
+            import ml_dtypes  # noqa: F401 — registered via jax
+            width = arr.dtype.itemsize
+            arr = arr.view(np.uint16 if width == 2 else np.uint8)
+        np.save(os.path.join(tmp, fn), arr)
+        names[k] = {"file": fn, "dtype": dtype_name}
+    if ocf is not None:
+        np.save(os.path.join(tmp, "ocf_table.npy"), np.asarray(ocf.state.table))
+        keys = np.fromiter((k for k, m in ocf._keys.items()
+                            for _ in range(m)), dtype=np.uint64,
+                           count=sum(ocf._keys.values()))
+        np.save(os.path.join(tmp, "ocf_keys.npy"), keys)
+    manifest = {"step": step, "leaves": names, "extra": extra or {},
+                "has_ocf": ocf is not None}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like_tree, *,
+            shardings=None) -> tuple[Any, dict]:
+    """Restore into the structure of ``like_tree``; optional resharding via
+    ``shardings`` (a matching tree of NamedSharding) for elastic restarts."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    # leaves must be rebuilt in TREE order (tree_unflatten's contract), while
+    # the manifest is keyed by path string — look each one up by key.
+    flat_pairs, treedef = jax.tree_util.tree_flatten_with_path(like_tree)
+    leaves = []
+    for k, _v in flat_pairs:
+        key = jax.tree_util.keystr(k)
+        rec = manifest["leaves"].get(key)
+        if rec is None:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        fn, dtype_name = rec["file"], rec["dtype"]
+        arr = np.load(os.path.join(path, fn))
+        if str(arr.dtype) != dtype_name:
+            import ml_dtypes
+            arr = arr.view(np.dtype(getattr(ml_dtypes, dtype_name)))
+        leaves.append(arr)
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.tree.map(lambda a, s: jax.device_put(a, s), tree, shardings)
+    return tree, manifest
+
+
+def restore_ocf(ckpt_dir: str, step: int, ocf: OCF) -> OCF:
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    keys = np.load(os.path.join(path, "ocf_keys.npy"))
+    ocf._keys.clear()
+    if keys.size:
+        ocf.insert(keys)
+    return ocf
+
+
+class AsyncCheckpointer:
+    """Fire-and-forget saves on a worker thread; join() before exit."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    def save(self, step: int, tree, **kw):
+        self.join()
+        host_tree = jax.tree.map(np.asarray, tree)  # snapshot before async
+
+        def work():
+            save(self.ckpt_dir, step, host_tree, **kw)
+            self._gc()
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def _gc(self):
+        steps = sorted(int(d.split("_")[1]) for d in os.listdir(self.ckpt_dir)
+                       if d.startswith("step_") and not d.endswith(".tmp"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.ckpt_dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def join(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

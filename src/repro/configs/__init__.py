@@ -1,0 +1,2 @@
+from repro.configs.registry import (ARCHS, LONG_CONTEXT_ARCHS, SHAPES, cells,
+                                    canonical, get_config, get_smoke_config)

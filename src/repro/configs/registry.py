@@ -1,0 +1,69 @@
+"""Config registry: ``get_config("<arch-id>")`` + per-shape input specs."""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+from repro.models.config import ModelConfig
+
+ARCHS = [
+    "llava_next_mistral_7b",
+    "mistral_nemo_12b",
+    "gemma3_1b",
+    "nemotron_4_15b",
+    "gemma2_27b",
+    "deepseek_v2_lite_16b",
+    "qwen3_moe_235b_a22b",
+    "mamba2_1p3b",
+    "recurrentgemma_2b",
+    "musicgen_large",
+]
+
+_ALIASES = {
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+    "mistral-nemo-12b": "mistral_nemo_12b",
+    "gemma3-1b": "gemma3_1b",
+    "nemotron-4-15b": "nemotron_4_15b",
+    "gemma2-27b": "gemma2_27b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "mamba2-1.3b": "mamba2_1p3b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "musicgen-large": "musicgen_large",
+}
+
+# (seq_len, global_batch, mode)
+SHAPES = {
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+# long_500k runs only for sub-quadratic archs (DESIGN.md §5)
+LONG_CONTEXT_ARCHS = {"mamba2_1p3b", "recurrentgemma_2b"}
+
+
+def canonical(arch: str) -> str:
+    return _ALIASES.get(arch, arch.replace("-", "_").replace(".", "p"))
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{canonical(arch)}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{canonical(arch)}")
+    return mod.SMOKE_CONFIG
+
+
+def cells(include_skipped: bool = False):
+    """All (arch, shape) dry-run cells; skipped long_500k cells flagged."""
+    out = []
+    for a in ARCHS:
+        for s in SHAPES:
+            runnable = s != "long_500k" or a in LONG_CONTEXT_ARCHS
+            if runnable or include_skipped:
+                out.append((a, s, runnable))
+    return out

@@ -1,0 +1,123 @@
+"""Distributed OCF — the paper's distributed-database story on a JAX mesh.
+
+Filter shards live along a mesh axis (one shard per `data`-axis slice, the
+same placement a Cassandra node ring would have).  A batched membership query
+is routed with the MoE dispatch shape:
+
+    owner = H(key) mod n_shards
+    one capacity-bounded all_to_all sends each key to its owner shard,
+    the owner probes its local table (pure gather/compare),
+    a second all_to_all returns the answers.
+
+Burst tolerance shows up here exactly as in the paper: the per-shard routing
+capacity is a buffer; ``overflow`` counts keys that exceeded it (answered
+conservatively "maybe present") and feeds the EOF congestion signal, the same
+way switch-queue marking drives the resize controller.
+
+Everything inside ``shard_map`` is shape-static and jit-safe; the controller
+(resize) stays on the host and swaps shard tables between steps.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import hashing
+
+
+class ShardedFilterState(NamedTuple):
+    """Stacked per-shard tables: uint32[n_shards, n_buckets, bucket_size]."""
+    tables: jax.Array
+
+
+def make_sharded_state(n_shards: int, n_buckets: int, bucket_size: int = 4
+                       ) -> ShardedFilterState:
+    return ShardedFilterState(
+        tables=jnp.zeros((n_shards, n_buckets, bucket_size), dtype=jnp.uint32))
+
+
+def _local_probe(table, hi, lo, fp_bits: int):
+    n_buckets = table.shape[0]
+    fp = hashing.fingerprint(hi, lo, fp_bits)
+    i1 = hashing.index_hash(hi, lo, n_buckets)
+    i2 = hashing.alt_index(i1, fp, n_buckets)
+    hit = (jnp.any(table[i1] == fp[:, None], axis=-1)
+           | jnp.any(table[i2] == fp[:, None], axis=-1))
+    return hit
+
+
+def distributed_lookup(mesh: Mesh, axis: str, state: ShardedFilterState,
+                       hi: jax.Array, lo: jax.Array, *, fp_bits: int,
+                       capacity_factor: float = 2.0):
+    """Batched membership across filter shards.
+
+    ``hi``/``lo``: uint32[n_shards * per_shard] keys, sharded over ``axis``.
+    Returns (hits bool[N], overflow int32[] per-shard overflow count).
+    Overflowed keys answer True ("maybe") — conservative for dedup/caching,
+    and the overflow count is the congestion signal for the EOF policy.
+    """
+    n_shards = mesh.shape[axis]
+    per_shard = hi.shape[0] // n_shards
+    cap = int(per_shard * capacity_factor / n_shards + 1)  # slots per (src,dst)
+
+    def shard_fn(tables, hi, lo):
+        # tables: [1, n_buckets, b] local shard; hi/lo: [per_shard]
+        table = tables[0]
+        my = jax.lax.axis_index(axis)
+        owner = hashing.owner_shard(hi, lo, n_shards).astype(jnp.int32)
+        # Build send buffers: [n_shards, cap] keys routed to each owner.
+        order = jnp.argsort(owner, stable=True)
+        s_owner, s_hi, s_lo = owner[order], hi[order], lo[order]
+        idx = jnp.arange(per_shard)
+        run_start = jnp.where(
+            jnp.concatenate([jnp.array([True]), s_owner[1:] != s_owner[:-1]]),
+            idx, 0)
+        run_start = jax.lax.associative_scan(jnp.maximum, run_start)
+        rank = idx - run_start
+        fits = rank < cap
+        overflow = jnp.sum(~fits, dtype=jnp.int32)
+        dst = jnp.where(fits, s_owner, n_shards)
+        buf_hi = jnp.zeros((n_shards, cap), jnp.uint32).at[dst, rank].set(
+            s_hi, mode="drop")
+        buf_lo = jnp.zeros((n_shards, cap), jnp.uint32).at[dst, rank].set(
+            s_lo, mode="drop")
+        valid = jnp.zeros((n_shards, cap), jnp.bool_).at[dst, rank].set(
+            fits, mode="drop")
+        # Exchange: after all_to_all, row s holds what shard s sent me.
+        r_hi = jax.lax.all_to_all(buf_hi, axis, 0, 0, tiled=False)
+        r_lo = jax.lax.all_to_all(buf_lo, axis, 0, 0, tiled=False)
+        r_valid = jax.lax.all_to_all(valid, axis, 0, 0, tiled=False)
+        hit = _local_probe(table, r_hi.reshape(-1), r_lo.reshape(-1),
+                           fp_bits).reshape(n_shards, cap)
+        hit = jnp.where(r_valid, hit, False)
+        # Route answers back.
+        back = jax.lax.all_to_all(hit, axis, 0, 0, tiled=False)  # [n_shards, cap]
+        # Scatter answers to original key order.
+        ans_sorted = jnp.where(fits, back[dst.clip(0, n_shards - 1), rank], True)
+        ans = jnp.zeros((per_shard,), jnp.bool_).at[order].set(ans_sorted)
+        del my
+        return ans, overflow[None]
+
+    fn = jax.shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis)),
+        out_specs=(P(axis), P(axis)))
+    return fn(state.tables, hi, lo)
+
+
+def local_shard_insert_host(state: ShardedFilterState, shard: int, table
+                            ) -> ShardedFilterState:
+    """Host-side table swap after a per-shard rebuild/insert."""
+    return ShardedFilterState(tables=state.tables.at[shard].set(table))
+
+
+@functools.partial(jax.jit, static_argnames=("fp_bits",))
+def replicated_lookup(tables: jax.Array, hi: jax.Array, lo: jax.Array, *,
+                      fp_bits: int) -> jax.Array:
+    """Probe every shard (broadcast query — 'is this key anywhere?')."""
+    hit = jax.vmap(lambda t: _local_probe(t, hi, lo, fp_bits))(tables)
+    return jnp.any(hit, axis=0)

@@ -1,0 +1,281 @@
+"""JAX (TPU-native) bulk cuckoo-filter data plane.
+
+The table lives in a **preallocated pow2 buffer** (a device memory pool);
+the *active* bucket count ``n_buckets`` is a traced int32 scalar, so OCF
+resizes — the paper's whole point — change no array shapes and trigger **no
+recompilation**.  Only buffer growth (rare, pow2) compiles a new executable.
+All index math is mod-``n_buckets`` (additive-complement alternate bucket —
+works for any active size, which EOF's fractional schedule requires).
+
+Semantics match ``pyfilter.PyCuckooFilter`` exactly (same hash family,
+deterministic eviction, transactional rollback) when buffer == active size —
+the tests assert table-for-table equality.
+
+Insert strategies:
+  * ``bulk_insert``          — lax.scan over keys, eviction chains in a
+                               lax.while_loop. Exact sequential semantics.
+  * ``parallel_insert_once`` — beyond-paper TPU optimization: one
+                               fully-vectorized optimistic round (intra-batch
+                               ranking, no chains).
+  * ``bulk_insert_hybrid``   — parallel round for the ~95% easy mass, scan
+                               fallback for the contended residue.
+All bulk ops take an optional ``valid`` mask so callers can batch in fixed
+chunks (padding never touches the table, so chunked calls hit one compile).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashing
+
+
+class FilterState(NamedTuple):
+    table: jax.Array      # uint32[buffer_buckets, bucket_size]; 0 == EMPTY
+    count: jax.Array      # int32[] live fingerprints
+    n_buckets: jax.Array  # int32[] ACTIVE bucket count (<= buffer_buckets)
+
+
+def make_state(n_buckets: int, bucket_size: int = 4,
+               buffer_buckets: Optional[int] = None) -> FilterState:
+    buf = buffer_buckets or n_buckets
+    assert buf >= n_buckets
+    return FilterState(
+        table=jnp.zeros((buf, bucket_size), dtype=jnp.uint32),
+        count=jnp.zeros((), dtype=jnp.int32),
+        n_buckets=jnp.asarray(n_buckets, jnp.int32))
+
+
+def _fp_i1_i2(hi, lo, n_buckets, fp_bits: int):
+    n = jnp.asarray(n_buckets, jnp.uint32)
+    fp = hashing.fingerprint(hi, lo, fp_bits)
+    i1 = hashing.index_hash_dyn(hi, lo, n)
+    i2 = hashing.alt_index_dyn(i1, fp, n)
+    return fp, i1, i2
+
+
+# ---------------------------------------------------------------- lookup ---
+
+
+@functools.partial(jax.jit, static_argnames=("fp_bits",))
+def bulk_lookup(state: FilterState, hi: jax.Array, lo: jax.Array, *,
+                fp_bits: int) -> jax.Array:
+    """Membership for a batch of keys -> bool[N]."""
+    fp, i1, i2 = _fp_i1_i2(hi, lo, state.n_buckets, fp_bits)
+    b1 = state.table[i1]  # [N, bucket_size]
+    b2 = state.table[i2]
+    return jnp.any(b1 == fp[:, None], axis=-1) | jnp.any(
+        b2 == fp[:, None], axis=-1)
+
+
+# ---------------------------------------------------------------- insert ---
+
+
+def _insert_one(table, fp, i1, i2, n_buckets, *, max_disp: int,
+                bucket_size: int):
+    """Insert one fingerprint; mirrors PyCuckooFilter.insert exactly."""
+    n = jnp.asarray(n_buckets, jnp.uint32)
+
+    def place(table, i, f):
+        row = table[i]
+        slot = jnp.argmax(row == 0)
+        has = jnp.any(row == 0)
+        new_row = jnp.where((jnp.arange(bucket_size) == slot) & has, f, row)
+        return table.at[i].set(new_row), has
+
+    table1, ok1 = place(table, i1, fp)
+
+    def try_i2(_):
+        return place(table, i2, fp)
+
+    table2, ok2 = jax.lax.cond(ok1, lambda _: (table1, jnp.bool_(True)),
+                               try_i2, operand=None)
+
+    def evict(_):
+        hist = jnp.zeros((max_disp,), dtype=jnp.uint32)
+
+        def cond(c):
+            _t, _i, _cur, step, _h, done = c
+            return (~done) & (step < max_disp)
+
+        def body(c):
+            t, i, cur, step, h, _done = c
+            j = (step % bucket_size).astype(jnp.int32)
+            old = t[i, j]
+            t = t.at[i, j].set(cur)
+            h = h.at[step].set(i)
+            cur = old
+            i = hashing.alt_index_dyn(i, cur, n)
+            row = t[i]
+            has = jnp.any(row == 0)
+            slot = jnp.argmax(row == 0)
+            new_row = jnp.where((jnp.arange(bucket_size) == slot) & has, cur,
+                                row)
+            t = t.at[i].set(new_row)
+            return (t, i, cur, step + 1, h, has)
+
+        t, i, cur, step, h, done = jax.lax.while_loop(
+            cond, body, (table, i2, fp, jnp.int32(0), hist, jnp.bool_(False)))
+
+        def rollback(args):
+            t, cur, h, step = args
+
+            def rb(k, tc):
+                t, cur = tc
+                idx = step - 1 - k
+                bi = h[idx]
+                bj = (idx % bucket_size).astype(jnp.int32)
+                old = t[bi, bj]
+                t = t.at[bi, bj].set(cur)
+                return (t, old)
+
+            t, _ = jax.lax.fori_loop(0, step, rb, (t, cur))
+            return t
+
+        t = jax.lax.cond(done, lambda a: a[0], rollback, (t, cur, h, step))
+        return t, done
+
+    return jax.lax.cond(ok2, lambda _: (table2, jnp.bool_(True)), evict,
+                        operand=None)
+
+
+@functools.partial(jax.jit, static_argnames=("fp_bits", "max_disp"))
+def bulk_insert(state: FilterState, hi: jax.Array, lo: jax.Array, *,
+                fp_bits: int, max_disp: int = 500,
+                valid: Optional[jax.Array] = None
+                ) -> tuple[FilterState, jax.Array]:
+    """Sequential-semantics bulk insert via lax.scan. Returns (state, ok[N])."""
+    bucket_size = state.table.shape[1]
+    fp, i1, i2 = _fp_i1_i2(hi, lo, state.n_buckets, fp_bits)
+    if valid is None:
+        valid = jnp.ones(hi.shape, bool)
+
+    def step(table, x):
+        f, a, b, v = x
+
+        def do(_):
+            return _insert_one(table, f, a, b, state.n_buckets,
+                               max_disp=max_disp, bucket_size=bucket_size)
+
+        return jax.lax.cond(v, do, lambda _: (table, jnp.bool_(False)),
+                            operand=None)
+
+    table, ok = jax.lax.scan(step, state.table, (fp, i1, i2, valid))
+    count = state.count + jnp.sum(ok, dtype=jnp.int32)
+    return FilterState(table, count, state.n_buckets), ok
+
+
+@functools.partial(jax.jit, static_argnames=("fp_bits",))
+def parallel_insert_once(state: FilterState, hi, lo, *, fp_bits: int,
+                         valid: Optional[jax.Array] = None
+                         ) -> tuple[FilterState, jax.Array]:
+    """One optimistic vectorized insert round (no eviction chains)."""
+    table = state.table
+    buf, bucket_size = table.shape
+    fp, i1, i2 = _fp_i1_i2(hi, lo, state.n_buckets, fp_bits)
+    n = fp.shape[0]
+    if valid is None:
+        valid = jnp.ones((n,), bool)
+
+    def round_(table, target, active, fp):
+        tgt = jnp.where(active, target, buf)  # park inactive past the buffer
+        order = jnp.argsort(tgt, stable=True)
+        sorted_tgt = tgt[order]
+        idx = jnp.arange(n)
+        run_start = jnp.where(
+            jnp.concatenate([jnp.array([True]),
+                             sorted_tgt[1:] != sorted_tgt[:-1]]), idx, 0)
+        run_start = jax.lax.associative_scan(jnp.maximum, run_start)
+        rank_sorted = idx - run_start
+        rank = jnp.zeros((n,), jnp.int32).at[order].set(
+            rank_sorted.astype(jnp.int32))
+        free = jnp.sum(table == 0, axis=1).astype(jnp.int32)
+        fits = active & (rank < free[target.clip(0, buf - 1)])
+        row = table[target.clip(0, buf - 1)]
+        empty_pos = jnp.cumsum((row == 0).astype(jnp.int32), axis=1) - 1
+        is_dest = (row == 0) & (empty_pos == rank[:, None])
+        slot = jnp.argmax(is_dest, axis=1)
+        upd_i = jnp.where(fits, target, buf)  # OOB -> dropped
+        table = table.at[upd_i, slot].set(fp, mode="drop")
+        return table, fits
+
+    table, ok1 = round_(table, i1.astype(jnp.int32), valid, fp)
+    table, ok2 = round_(table, i2.astype(jnp.int32), valid & ~ok1, fp)
+    placed = ok1 | ok2
+    count = state.count + jnp.sum(placed, dtype=jnp.int32)
+    return FilterState(table, count, state.n_buckets), placed
+
+
+def bulk_insert_hybrid(state: FilterState, hi, lo, *, fp_bits: int,
+                       max_disp: int = 500, valid=None
+                       ) -> tuple[FilterState, jax.Array]:
+    """Parallel optimistic round + sequential fallback for the residue.
+
+    Membership semantics are order-independent, so only the table layout may
+    differ from pure-sequential — membership answers do not."""
+    state, placed = parallel_insert_once(state, hi, lo, fp_bits=fp_bits,
+                                         valid=valid)
+    residue = (~placed) if valid is None else (valid & ~placed)
+    if not bool(jnp.any(residue)):
+        return state, placed
+    state2, ok2 = bulk_insert(state, hi, lo, fp_bits=fp_bits,
+                              max_disp=max_disp, valid=residue)
+    return state2, placed | ok2
+
+
+# ---------------------------------------------------------------- delete ---
+
+
+@functools.partial(jax.jit, static_argnames=("fp_bits",))
+def bulk_delete(state: FilterState, hi: jax.Array, lo: jax.Array, *,
+                fp_bits: int, valid: Optional[jax.Array] = None
+                ) -> tuple[FilterState, jax.Array]:
+    """Sequential-semantics bulk delete (scan). Returns (state, ok[N])."""
+    bucket_size = state.table.shape[1]
+    fp, i1, i2 = _fp_i1_i2(hi, lo, state.n_buckets, fp_bits)
+    if valid is None:
+        valid = jnp.ones(hi.shape, bool)
+
+    def step(table, x):
+        f, a, b, v = x
+
+        def clear(table, i):
+            row = table[i]
+            hit = row == f
+            has = jnp.any(hit)
+            slot = jnp.argmax(hit)
+            new_row = jnp.where((jnp.arange(bucket_size) == slot) & has,
+                                jnp.uint32(0), row)
+            return table.at[i].set(new_row), has
+
+        def do(_):
+            t1, ok1 = clear(table, a)
+
+            def try2(_):
+                return clear(table, b)
+
+            return jax.lax.cond(ok1, lambda _: (t1, jnp.bool_(True)), try2,
+                                operand=None)
+
+        return jax.lax.cond(v, do, lambda _: (table, jnp.bool_(False)),
+                            operand=None)
+
+    table, ok = jax.lax.scan(step, state.table, (fp, i1, i2, valid))
+    count = state.count - jnp.sum(ok, dtype=jnp.int32)
+    return FilterState(table, count, state.n_buckets), ok
+
+
+# ------------------------------------------------------------- rebuild -----
+
+
+def rebuild(keys_hi, keys_lo, n_buckets: int, bucket_size: int, *,
+            fp_bits: int, max_disp: int = 500,
+            buffer_buckets: Optional[int] = None, valid=None
+            ) -> tuple[FilterState, jax.Array]:
+    """Re-insert a keystore into a fresh table of the new active capacity."""
+    state = make_state(n_buckets, bucket_size, buffer_buckets)
+    return bulk_insert_hybrid(state, keys_hi, keys_lo, fp_bits=fp_bits,
+                              max_disp=max_disp, valid=valid)

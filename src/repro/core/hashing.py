@@ -1,0 +1,174 @@
+"""Hash primitives for the Optimized Cuckoo Filter.
+
+TPU-native design note (see DESIGN.md §2): TPUs have no 64-bit integer lanes,
+so all hashing is expressed as 32-bit mixes (murmur3 finalizer and a
+splitmix-derived 32-bit mixer).  Every function has two spellings with
+identical bit-level semantics:
+
+  * ``*_np``  — numpy/uint32 (host oracle, used by ``pyfilter.py``),
+  * jnp       — jitted JAX (used by ``filter.py`` and the Pallas kernels).
+
+Keys are arbitrary uint32/uint64-representable integers; 64-bit keys are fed
+in as (hi, lo) uint32 pairs so the same code runs on TPU.
+
+Partial-key cuckoo hashing (Fan et al. 2014) needs, per key:
+  fp  = fingerprint(key)      in [1, 2^f - 1]   (0 is the EMPTY sentinel)
+  i1  = index_hash(key)       mod n_buckets
+  i2  = (H(fp) - i1) mod n    -- additive-complement involution; unlike the
+                                 XOR trick it works for ANY bucket count,
+                                 which EOF's fractional resizing requires.
+  alt(alt(i)) == i            for both i1 and i2 by construction.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+_M3_C1 = np.uint32(0x85EBCA6B)
+_M3_C2 = np.uint32(0xC2B2AE35)
+_SM_C1 = np.uint32(0x9E3779B9)  # golden-ratio increment (splitmix)
+_SM_C2 = np.uint32(0x7FEB352D)
+_SM_C3 = np.uint32(0x846CA68B)
+
+# ---------------------------------------------------------------- numpy ----
+
+
+def murmur3_mix_np(x: np.ndarray) -> np.ndarray:
+    """murmur3 32-bit finalizer — a full-avalanche bijection on uint32."""
+    x = np.asarray(x, dtype=np.uint32)
+    with np.errstate(over="ignore"):
+        x = x ^ (x >> np.uint32(16))
+        x = (x * _M3_C1).astype(np.uint32)
+        x = x ^ (x >> np.uint32(13))
+        x = (x * _M3_C2).astype(np.uint32)
+        x = x ^ (x >> np.uint32(16))
+    return x
+
+
+def splitmix32_np(x: np.ndarray) -> np.ndarray:
+    """splitmix-style 32-bit mixer (independent avalanche function)."""
+    x = np.asarray(x, dtype=np.uint32)
+    with np.errstate(over="ignore"):
+        x = (x + _SM_C1).astype(np.uint32)
+        x = x ^ (x >> np.uint32(16))
+        x = (x * _SM_C2).astype(np.uint32)
+        x = x ^ (x >> np.uint32(15))
+        x = (x * _SM_C3).astype(np.uint32)
+        x = x ^ (x >> np.uint32(16))
+    return x
+
+
+def key_to_u32_pair_np(keys) -> tuple[np.ndarray, np.ndarray]:
+    """Split arbitrary integer keys into (hi, lo) uint32 halves."""
+    k = np.asarray(keys, dtype=np.uint64)
+    lo = (k & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+    hi = (k >> np.uint64(32)).astype(np.uint32)
+    return hi, lo
+
+
+def fingerprint_np(hi: np.ndarray, lo: np.ndarray, fp_bits: int) -> np.ndarray:
+    """Fingerprint in [1, 2^fp_bits - 1] (0 reserved as EMPTY)."""
+    h = murmur3_mix_np(lo ^ murmur3_mix_np(hi ^ np.uint32(0xDEADBEEF)))
+    mask = np.uint32((1 << fp_bits) - 1)
+    fp = (h & mask).astype(np.uint32)
+    # Remap 0 -> 1: costs a sliver of entropy, keeps the sentinel free.
+    return np.where(fp == 0, np.uint32(1), fp)
+
+
+def index_hash_np(hi: np.ndarray, lo: np.ndarray, n_buckets: int) -> np.ndarray:
+    h = splitmix32_np(lo) ^ murmur3_mix_np(hi + np.uint32(0x51ED270B))
+    return (h % np.uint32(n_buckets)).astype(np.uint32)
+
+
+def alt_index_np(i: np.ndarray, fp: np.ndarray, n_buckets: int) -> np.ndarray:
+    """Additive-complement alternate bucket: alt(i) = (H(fp) - i) mod n."""
+    hfp = splitmix32_np(fp).astype(np.uint64) % np.uint64(n_buckets)
+    i = np.asarray(i, dtype=np.uint64) % np.uint64(n_buckets)
+    return ((hfp + np.uint64(n_buckets) - i) % np.uint64(n_buckets)).astype(np.uint32)
+
+
+def owner_shard_np(hi: np.ndarray, lo: np.ndarray, n_shards: int) -> np.ndarray:
+    """Which filter shard owns a key in the distributed OCF."""
+    h = murmur3_mix_np(splitmix32_np(lo) + hi)
+    return (h % np.uint32(n_shards)).astype(np.uint32)
+
+
+# ------------------------------------------------------------------ jax ----
+
+
+def murmur3_mix(x: jax.Array) -> jax.Array:
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(_M3_C1)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(_M3_C2)
+    x = x ^ (x >> 16)
+    return x
+
+
+def splitmix32(x: jax.Array) -> jax.Array:
+    x = x.astype(jnp.uint32)
+    x = x + jnp.uint32(_SM_C1)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(_SM_C2)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(_SM_C3)
+    x = x ^ (x >> 16)
+    return x
+
+
+def fingerprint(hi: jax.Array, lo: jax.Array, fp_bits: int) -> jax.Array:
+    h = murmur3_mix(lo ^ murmur3_mix(hi ^ jnp.uint32(0xDEADBEEF)))
+    fp = h & jnp.uint32((1 << fp_bits) - 1)
+    return jnp.where(fp == 0, jnp.uint32(1), fp)
+
+
+def index_hash(hi: jax.Array, lo: jax.Array, n_buckets: int) -> jax.Array:
+    h = splitmix32(lo) ^ murmur3_mix(hi + jnp.uint32(0x51ED270B))
+    return h % jnp.uint32(n_buckets)
+
+
+def alt_index(i: jax.Array, fp: jax.Array, n_buckets: int) -> jax.Array:
+    """(H(fp) - i) mod n without 64-bit ints (TPU-safe).
+
+    Both H(fp)%n and i%n are < n <= 2^31, so (a - b + n) stays in uint32.
+    """
+    hfp = splitmix32(fp) % jnp.uint32(n_buckets)
+    i = i.astype(jnp.uint32) % jnp.uint32(n_buckets)
+    return (hfp + jnp.uint32(n_buckets) - i) % jnp.uint32(n_buckets)
+
+
+def index_hash_dyn(hi: jax.Array, lo: jax.Array, n_buckets) -> jax.Array:
+    """index_hash with a *traced* bucket count (dynamic-capacity filter)."""
+    h = splitmix32(lo) ^ murmur3_mix(hi + jnp.uint32(0x51ED270B))
+    return h % jnp.asarray(n_buckets, jnp.uint32)
+
+
+def alt_index_dyn(i: jax.Array, fp: jax.Array, n_buckets) -> jax.Array:
+    """alt_index with a traced bucket count."""
+    n = jnp.asarray(n_buckets, jnp.uint32)
+    hfp = splitmix32(fp) % n
+    i = i.astype(jnp.uint32) % n
+    return (hfp + n - i) % n
+
+
+def owner_shard(hi: jax.Array, lo: jax.Array, n_shards: int) -> jax.Array:
+    h = murmur3_mix(splitmix32(lo) + hi)
+    return h % jnp.uint32(n_shards)
+
+
+def key_to_u32_pair(keys: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """JAX version.  Accepts uint32 (hi=0) or uint64-packed-in-2xuint32 input.
+
+    On CPU hosts we allow uint64 input (x64 may be off, so we accept int64 /
+    uint64 via two uint32 views); inside TPU programs callers pass pairs.
+    """
+    if keys.dtype in (jnp.uint32, jnp.int32):
+        lo = keys.astype(jnp.uint32)
+        hi = jnp.zeros_like(lo)
+        return hi, lo
+    k = keys.astype(jnp.uint64)
+    lo = (k & jnp.uint64(0xFFFFFFFF)).astype(jnp.uint32)
+    hi = (k >> jnp.uint64(32)).astype(jnp.uint32)
+    return hi, lo

@@ -1,0 +1,243 @@
+"""OCF — the Optimized Cuckoo Filter (paper §II).
+
+Host-side control plane + JAX data plane:
+
+  * data plane: jitted bulk lookup/insert/delete over a device-resident
+    table with a **dynamic active capacity inside a preallocated pow2
+    buffer** (repro.core.filter) — resizes change no shapes, so the jit
+    cache stays warm across the whole EOF schedule; device calls are
+    fixed-``CHUNK`` batches with validity masks (one compile per buffer
+    size, ever).
+  * control plane: PRE or EOF resize policy; on a resize decision (or an
+    insert failure = filter full) the table is **rebuilt from the backing
+    keystore** at the new capacity.  The keystore also makes deletes safe:
+    only keys it contains reach the filter (the paper's fix for
+    blind-delete corruption).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import filter as jfilter
+from repro.core import hashing
+from repro.core.policy import EofPolicy, PrePolicy, ResizeDecision
+
+SNAP_BUCKETS = 256
+CHUNK = 4096
+
+
+@dataclasses.dataclass
+class OcfConfig:
+    """Paper §II-B parameters."""
+
+    capacity: int = 1 << 16          # item slots; paper: 2× expected items
+    bucket_size: int = 4             # paper-recommended
+    fp_bits: int = 16
+    max_displacements: int = 500
+    mode: Literal["PRE", "EOF"] = "EOF"
+    o_max: float = 0.85              # Max Occupancy
+    o_min: float = 0.25              # Min Occupancy
+    k_min: float = 0.35              # K markers (EOF)
+    k_max: float = 0.75
+    gain: float = 1.0 / 16.0         # Estimation Gain g (EOF)
+    c_min: int = 1024
+    c_max: int = 1 << 30
+
+    def make_policy(self):
+        if self.mode == "PRE":
+            return PrePolicy(o_max=self.o_max, o_min=self.o_min,
+                             c_min=self.c_min, c_max=self.c_max)
+        return EofPolicy(o_max=self.o_max, o_min=self.o_min, k_min=self.k_min,
+                         k_max=self.k_max, gain=self.gain, c_min=self.c_min,
+                         c_max=self.c_max)
+
+
+@dataclasses.dataclass
+class OcfStats:
+    inserts: int = 0
+    deletes: int = 0
+    lookups: int = 0
+    resizes: int = 0
+    grows: int = 0
+    shrinks: int = 0
+    rebuild_keys: int = 0
+    failed_inserts: int = 0       # chain exhausted -> emergency grow
+    blind_deletes_blocked: int = 0
+    buffer_reallocs: int = 0      # pow2 buffer growth (recompile events)
+
+
+def _pow2_at_least(n: int) -> int:
+    p = 1
+    while p < n:
+        p <<= 1
+    return p
+
+
+class OCF:
+    """Optimized Cuckoo Filter with a backing keystore (memtable analogue)."""
+
+    def __init__(self, config: OcfConfig | None = None):
+        self.config = config or OcfConfig()
+        self.policy = self.config.make_policy()
+        self._keys: dict[int, int] = {}  # key -> multiplicity
+        active = self._snap_buckets(self.config.capacity)
+        buf = _pow2_at_least(active)
+        self.state = jfilter.make_state(active, self.config.bucket_size,
+                                        buffer_buckets=buf)
+        self.stats = OcfStats()
+        self.capacity_history: list[int] = [self.capacity]
+
+    # ------------------------------------------------------------ props --
+
+    def _snap_buckets(self, capacity_slots: int) -> int:
+        b = max(1, -(-capacity_slots // self.config.bucket_size))
+        return -(-b // SNAP_BUCKETS) * SNAP_BUCKETS
+
+    @property
+    def capacity(self) -> int:
+        return int(self.state.n_buckets) * self.config.bucket_size
+
+    @property
+    def buffer_capacity(self) -> int:
+        return self.state.table.shape[0] * self.config.bucket_size
+
+    @property
+    def count(self) -> int:
+        return int(self.state.count)
+
+    @property
+    def occupancy(self) -> float:
+        return self.count / self.capacity
+
+    def __len__(self) -> int:
+        return sum(self._keys.values())
+
+    # ---------------------------------------------------------- chunking --
+
+    @staticmethod
+    def _chunks(keys: np.ndarray):
+        """Yield (hi, lo, valid, n_real) fixed-size CHUNK batches."""
+        for i in range(0, keys.size, CHUNK):
+            part = keys[i:i + CHUNK]
+            n = part.size
+            if n < CHUNK:
+                part = np.pad(part, (0, CHUNK - n))
+            hi, lo = hashing.key_to_u32_pair_np(part)
+            valid = np.zeros(CHUNK, bool)
+            valid[:n] = True
+            yield jnp.asarray(hi), jnp.asarray(lo), jnp.asarray(valid), n
+
+    # ------------------------------------------------------------- ops ---
+
+    def lookup(self, keys) -> np.ndarray:
+        keys = np.asarray(keys, dtype=np.uint64)
+        self.stats.lookups += keys.size
+        out = np.zeros(keys.size, bool)
+        off = 0
+        for hi, lo, _valid, n in self._chunks(keys):
+            hits = jfilter.bulk_lookup(self.state, hi, lo,
+                                       fp_bits=self.config.fp_bits)
+            out[off:off + n] = np.asarray(hits)[:n]
+            off += n
+        return out
+
+    def insert(self, keys) -> np.ndarray:
+        """Insert a batch; returns ok mask (all True unless c_max exhausted)."""
+        keys = np.asarray(keys, dtype=np.uint64)
+        self.stats.inserts += keys.size
+        self._maybe_resize(extra=keys.size, ops=keys.size)
+        for k in keys.tolist():
+            self._keys[k] = self._keys.get(k, 0) + 1
+        all_ok = True
+        for hi, lo, valid, n in self._chunks(keys):
+            state, ok = jfilter.bulk_insert_hybrid(
+                self.state, hi, lo, fp_bits=self.config.fp_bits,
+                max_disp=self.config.max_displacements, valid=valid)
+            self.state = state
+            if not bool(np.asarray(ok)[:n].all()):
+                all_ok = False
+                self.stats.failed_inserts += int(
+                    (~np.asarray(ok)[:n]).sum())
+        if not all_ok:
+            # Emergency grow + rebuild; the keystore already holds the whole
+            # batch, so the rebuild IS the retry (never double-insert).
+            self._resize(ResizeDecision(
+                new_capacity=min(self.capacity * 2, self.config.c_max),
+                reason="grow"))
+        return np.ones(keys.size, dtype=bool)
+
+    def delete(self, keys) -> np.ndarray:
+        """Verified delete (paper §IV): only keystore-present keys reach the
+        filter, so foreign fingerprints are never removed."""
+        keys = np.asarray(keys, dtype=np.uint64)
+        self.stats.deletes += keys.size
+        present = np.array([self._keys.get(int(k), 0) > 0 for k in keys])
+        self.stats.blind_deletes_blocked += int((~present).sum())
+        victims = keys[present]
+        if victims.size:
+            for k in victims.tolist():
+                self._keys[k] -= 1
+                if self._keys[k] <= 0:
+                    del self._keys[k]
+            for hi, lo, valid, n in self._chunks(victims):
+                state, _ok = jfilter.bulk_delete(
+                    self.state, hi, lo, fp_bits=self.config.fp_bits,
+                    valid=valid)
+                self.state = state
+        self._maybe_resize(ops=keys.size)
+        return present
+
+    def contains_key_exact(self, key: int) -> bool:
+        return self._keys.get(int(key), 0) > 0
+
+    # ---------------------------------------------------------- control --
+
+    def _maybe_resize(self, extra: int = 0, ops: int = 1) -> None:
+        decision = self.policy.observe(items=self.count + extra,
+                                       capacity=self.capacity, ops=ops)
+        if decision is not None:
+            self._resize(decision)
+
+    def _rebuild_into(self, active_buckets: int, buffer_buckets: int) -> bool:
+        keys = np.fromiter(
+            (k for k, m in self._keys.items() for _ in range(m)),
+            dtype=np.uint64, count=sum(self._keys.values()))
+        state = jfilter.make_state(active_buckets, self.config.bucket_size,
+                                   buffer_buckets=buffer_buckets)
+        ok_all = True
+        for hi, lo, valid, n in self._chunks(keys):
+            state, ok = jfilter.bulk_insert_hybrid(
+                state, hi, lo, fp_bits=self.config.fp_bits,
+                max_disp=self.config.max_displacements, valid=valid)
+            ok_all = ok_all and bool(np.asarray(ok)[:n].all())
+        if ok_all:
+            self.state = state
+            self.stats.rebuild_keys += keys.size
+        return ok_all
+
+    def _resize(self, decision: ResizeDecision) -> None:
+        new_active = self._snap_buckets(decision.new_capacity)
+        if new_active == int(self.state.n_buckets):
+            return
+        buf = self.state.table.shape[0]
+        # Reallocate the buffer only when the active size outgrows it or
+        # drops below a quarter of it (reclaim memory); pow2 keeps the jit
+        # cache to O(log range) entries.
+        if new_active > buf or new_active * 4 < buf:
+            buf = _pow2_at_least(new_active)
+            self.stats.buffer_reallocs += 1
+        while not self._rebuild_into(new_active, max(buf, _pow2_at_least(
+                new_active))):
+            # Shrink too tight even after clamping: grow until it fits.
+            new_active *= 2
+            buf = _pow2_at_least(new_active)
+        self.stats.resizes += 1
+        if decision.reason == "grow":
+            self.stats.grows += 1
+        else:
+            self.stats.shrinks += 1
+        self.capacity_history.append(self.capacity)

@@ -1,0 +1,118 @@
+"""Pure-Python/numpy reference cuckoo filter — the semantic oracle.
+
+This is the closest thing in the codebase to the paper's original CPU
+implementation: per-key operations with explicit eviction chains.  Every
+JAX/Pallas fast path is tested against it bit-for-bit (same hash functions,
+same table layout, same eviction order), so "oracle agreement" means the
+vectorized paths implement *exactly* this structure.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import hashing
+
+
+@dataclasses.dataclass
+class PyCuckooFilter:
+    """Standard cuckoo filter with partial-key hashing (Fan et al. 2014).
+
+    Table: ``uint32[n_buckets, bucket_size]``, 0 == EMPTY.
+    Alternate bucket uses the additive-complement involution so n_buckets can
+    be arbitrary (required by OCF's fractional resizing; DESIGN.md §1).
+    """
+
+    n_buckets: int
+    bucket_size: int = 4
+    fp_bits: int = 16
+    max_displacements: int = 500
+
+    def __post_init__(self):
+        assert 1 <= self.fp_bits <= 32
+        self.table = np.zeros((self.n_buckets, self.bucket_size), dtype=np.uint32)
+        self.count = 0
+
+    # -- derived -------------------------------------------------------
+
+    @property
+    def capacity(self) -> int:
+        return self.n_buckets * self.bucket_size
+
+    @property
+    def occupancy(self) -> float:
+        return self.count / self.capacity
+
+    def _fp_i1(self, key: int) -> tuple[int, int]:
+        hi, lo = hashing.key_to_u32_pair_np(np.uint64(key))
+        fp = int(hashing.fingerprint_np(hi, lo, self.fp_bits))
+        i1 = int(hashing.index_hash_np(hi, lo, self.n_buckets))
+        return fp, i1
+
+    def _alt(self, i: int, fp: int) -> int:
+        return int(hashing.alt_index_np(np.uint32(i), np.uint32(fp), self.n_buckets))
+
+    # -- core ops ------------------------------------------------------
+
+    def lookup(self, key: int) -> bool:
+        fp, i1 = self._fp_i1(key)
+        i2 = self._alt(i1, fp)
+        return bool(np.any(self.table[i1] == fp) or np.any(self.table[i2] == fp))
+
+    def insert(self, key: int) -> bool:
+        """Insert; returns False when the filter is full (chain exhausted).
+
+        Deterministic eviction (kick slot = step mod bucket_size, chain starts
+        at i2) so the JAX ``lax.scan`` path reproduces this table exactly.
+        Transactional: a failed insert rolls the chain back, leaving the
+        table unchanged — no resident key is ever orphaned by a failure
+        (the paper observed false negatives near saturation; rollback is the
+        safeguard that lets OCF resize *then* retry losslessly).
+        """
+        fp, i1 = self._fp_i1(key)
+        i2 = self._alt(i1, fp)
+        for i in (i1, i2):
+            slot = np.where(self.table[i] == 0)[0]
+            if slot.size:
+                self.table[i, slot[0]] = fp
+                self.count += 1
+                return True
+        # Eviction chain with rollback history.
+        i, cur = i2, np.uint32(fp)
+        hist: list[tuple[int, int]] = []
+        for step in range(self.max_displacements):
+            j = step % self.bucket_size
+            cur, self.table[i, j] = self.table[i, j], cur
+            hist.append((i, j))
+            i = self._alt(i, int(cur))
+            slot = np.where(self.table[i] == 0)[0]
+            if slot.size:
+                self.table[i, slot[0]] = cur
+                self.count += 1
+                return True
+        for (bi, bj) in reversed(hist):
+            cur, self.table[bi, bj] = self.table[bi, bj], cur
+        assert cur == fp  # rollback returned the original fingerprint
+        return False
+
+    def delete(self, key: int) -> bool:
+        fp, i1 = self._fp_i1(key)
+        for i in (i1, self._alt(i1, fp)):
+            slot = np.where(self.table[i] == fp)[0]
+            if slot.size:
+                self.table[i, slot[0]] = 0
+                self.count -= 1
+                return True
+        return False
+
+    # -- bulk wrappers (oracle for the JAX bulk ops) --------------------
+
+    def bulk_lookup(self, keys) -> np.ndarray:
+        return np.array([self.lookup(int(k)) for k in np.asarray(keys)], dtype=bool)
+
+    def bulk_insert(self, keys) -> np.ndarray:
+        return np.array([self.insert(int(k)) for k in np.asarray(keys)], dtype=bool)
+
+    def bulk_delete(self, keys) -> np.ndarray:
+        return np.array([self.delete(int(k)) for k in np.asarray(keys)], dtype=bool)

@@ -1,0 +1,3 @@
+from repro.distributed.sharding import (ParallelConfig, batch_pspec,
+                                        cache_pspec, make_shardings,
+                                        spec_to_pspec)

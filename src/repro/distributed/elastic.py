@@ -1,0 +1,44 @@
+"""Elastic scaling: rebuild the mesh from the live device set and reshard.
+
+When a pod (or slice) drops out, training continues on the surviving
+devices: pick the largest (data × model) grid the survivors support, rebuild
+shardings from the *logical* specs (sharding.py), and device_put the
+checkpointed state onto the new mesh.  Because every tensor's layout is
+derived from logical names rather than hard-coded axes, resharding is a
+pure re-evaluation of the rules — no per-arch code.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh
+
+from repro.distributed.sharding import ParallelConfig, make_shardings
+
+
+def largest_mesh(devices: Optional[Sequence] = None, *, model_parallel: int,
+                 axis_names=("data", "model")) -> Mesh:
+    """Largest (data, model) mesh on the surviving devices.
+
+    Keeps TP fixed (weights must still fit) and gives every remaining
+    multiple of ``model_parallel`` devices to data parallelism.
+    """
+    devices = list(devices if devices is not None else jax.devices())
+    n = len(devices)
+    data = n // model_parallel
+    if data < 1:
+        raise RuntimeError(
+            f"{n} devices cannot host model_parallel={model_parallel}")
+    use = devices[: data * model_parallel]
+    return jax.make_mesh((data, model_parallel), axis_names, devices=use,
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def reshard_state(state_tree, specs_tree, new_mesh: Mesh,
+                  parallel: ParallelConfig):
+    """Re-derive shardings from logical specs on the new mesh and move."""
+    shapes = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state_tree)
+    shardings = make_shardings(new_mesh, specs_tree, shapes, parallel)
+    return jax.tree.map(jax.device_put, state_tree, shardings)

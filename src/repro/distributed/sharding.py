@@ -1,0 +1,205 @@
+"""Logical-axis → mesh-axis sharding rules (FSDP × TP × EP × pod-DP).
+
+Model code annotates every parameter dim with a *logical* name
+(repro.models.layers docstring).  This module turns those into
+``PartitionSpec``s for a concrete mesh:
+
+  expert → model   (expert parallelism: dispatch all-to-all on the TP axis)
+  vocab/heads/kv/mlp/rnn/lora → model   (Megatron TP)
+  embed → data     (FSDP: params sharded over the DP axis, all-gathered
+                    per layer by XLA — the standard ZeRO-3 lowering)
+  mem   → data
+  layers → never sharded (scan axis)
+
+Each mesh axis is used at most once per tensor (priority order below); any
+dim that does not divide evenly falls back to replication — this is what
+makes one rule set serve ten heterogeneous architectures.
+
+``pod`` axis: pure data parallelism by default (params replicated across
+pods, gradients all-reduced — compressible, see optim), or FSDP over
+(pod, data) with ``pod_fsdp=True`` (beyond-paper memory optimization).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PRIORITY = ["expert", "vocab", "heads", "kv", "mlp", "rnn", "lora", "embed",
+            "mem"]
+AXIS_FOR = {
+    "expert": "model", "vocab": "model", "heads": "model", "kv": "model",
+    "mlp": "model", "rnn": "model", "lora": "model",
+    "embed": "data", "mem": "data",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelConfig:
+    data_axis: str = "data"
+    model_axis: str = "model"
+    pod_axis: Optional[str] = None      # set for the multi-pod mesh
+    pod_fsdp: bool = False              # shard params over (pod, data)
+    compress_grads: bool = False        # bf16 cross-pod gradient all-reduce
+    compress_int8: bool = False         # int8 instead of bf16 (4x vs f32)
+    remat: str = "none"                 # none | full | dots
+    microbatches: int = 1
+    seq_shard: bool = False             # sequence-sharded activations (SP)
+    layout: str = "tp_fsdp"             # tp_fsdp | fsdp_only | tp_only
+    ep_axis: str = "model"              # model | data  (expert placement)
+    # mesh axis sizes, filled by the launcher — lets jitted code apply
+    # sharding constraints without querying (possibly absent) mesh context
+    axis_sizes: Optional[tuple] = None  # (("data",16),("model",16),...)
+
+    def size_of(self, axis: str) -> int:
+        if not self.axis_sizes:
+            return 0
+        return dict(self.axis_sizes).get(axis, 0)
+
+    def batch_axes(self):
+        axes = ((self.pod_axis, self.data_axis) if self.pod_axis
+                else (self.data_axis,))
+        if self.layout == "fsdp_only":
+            # no TP: the model axis carries extra data parallelism
+            axes = (*axes, self.model_axis)
+        return axes
+
+
+def _mesh_axis(logical: str, parallel: ParallelConfig):
+    a = AXIS_FOR.get(logical)
+    if logical == "expert" and parallel.ep_axis == "data":
+        # EP over the data axis: expert weights never all-gathered (FSDP);
+        # the dispatch einsum becomes the MoE all-to-all instead.
+        return parallel.data_axis
+    if parallel.layout == "fsdp_only" and a == "model":
+        return None           # weights replicated across the model axis
+    if parallel.layout == "tp_only" and a == "data":
+        return None           # no FSDP: weights whole per TP rank
+    if a == "data":
+        if parallel.pod_fsdp and parallel.pod_axis:
+            return (parallel.pod_axis, parallel.data_axis)
+        return parallel.data_axis
+    if a == "model":
+        return parallel.model_axis
+    return None
+
+
+def spec_to_pspec(spec: tuple, shape: tuple, mesh: Mesh,
+                  parallel: ParallelConfig) -> P:
+    """One tensor's logical spec -> PartitionSpec with divisibility checks."""
+    used: set = set()
+    out = []
+    # decide assignment in priority order, then emit in dim order
+    assign: dict[int, Any] = {}
+    order = sorted(range(len(spec)),
+                   key=lambda i: PRIORITY.index(spec[i])
+                   if spec[i] in PRIORITY else len(PRIORITY))
+    for i in order:
+        name = spec[i]
+        if name is None or name == "layers":
+            continue
+        ax = _mesh_axis(name, parallel)
+        if ax is None:
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        if any(a in used for a in axes):
+            continue
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        if shape[i] % size != 0:
+            # fall back to the last axis alone if that divides
+            if (len(axes) > 1 and shape[i] % mesh.shape[axes[-1]] == 0
+                    and axes[-1] not in used):
+                axes = (axes[-1],)
+            else:
+                continue
+        for a in axes:
+            used.add(a)
+        assign[i] = axes if len(axes) > 1 else axes[0]
+    for i in range(len(spec)):
+        out.append(assign.get(i))
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def make_shardings(mesh: Mesh, specs_tree, shapes_tree,
+                   parallel: ParallelConfig):
+    """Parallel trees of logical specs + shapes -> NamedSharding tree."""
+    def one(spec, shaped):
+        return NamedSharding(mesh, spec_to_pspec(tuple(spec), shaped.shape,
+                                                 mesh, parallel))
+    return jax.tree.map(one, specs_tree, shapes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and
+                        all(isinstance(e, (str, type(None))) for e in x))
+
+
+def batch_pspec(batch_size: int, ndim: int, mesh: Mesh,
+                parallel: ParallelConfig, *, seq_dim: int | None = None) -> P:
+    """Sharding for a [B, ...] input: batch over (pod,)data when divisible,
+    optional sequence sharding over model for long-context activations."""
+    axes = parallel.batch_axes()
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    first = None
+    if batch_size % size == 0:
+        first = axes if len(axes) > 1 else axes[0]
+    elif batch_size % mesh.shape[parallel.data_axis] == 0:
+        first = parallel.data_axis
+    spec = [first] + [None] * (ndim - 1)
+    if parallel.seq_shard and seq_dim is not None and first is not None:
+        spec[seq_dim] = parallel.model_axis
+    return P(*spec)
+
+
+def constrain_batch_activations(x, parallel: Optional[ParallelConfig], *,
+                                batch_size: Optional[int] = None):
+    """Pin [B, S, D] activations to batch-over-(pod,)data (+ optional SP).
+
+    GSPMD occasionally resolves ambiguous layouts by replicating the batch
+    and sharding D — then re-gathers multi-GB activations every layer (the
+    recurrentgemma pathology, EXPERIMENTS.md §Perf iter 2).  An explicit
+    constraint at every block boundary removes the ambiguity.  No-op when
+    ``parallel`` is None (single-device tests) or the batch doesn't divide.
+    """
+    if parallel is None or not parallel.axis_sizes:
+        return x
+    b = batch_size if batch_size is not None else x.shape[0]
+    axes = parallel.batch_axes()
+    prod = 1
+    for a in axes:
+        prod *= max(1, parallel.size_of(a))
+    if prod <= 1 or b % prod != 0:
+        return x
+    spec = [axes if len(axes) > 1 else axes[0]] + [None] * (x.ndim - 1)
+    if parallel.seq_shard and x.ndim >= 3:
+        spec[1] = parallel.model_axis
+    import jax
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def cache_pspec(shape: tuple, mesh: Mesh, parallel: ParallelConfig) -> P:
+    """KV/state caches: batch over data + context-parallel seq over model.
+
+    Sharding the *sequence* dim of KV caches over the TP axis makes decode
+    attention context-parallel: each rank scores its slice of history and
+    the softmax combines with O(B·H) partial-max/sum all-reduces — versus
+    head-dim sharding, whose contraction all-reduces full [B,H,1,S] logits
+    every step (§Perf dsv2/iter4).  States without a seq dim (SSM, RG-LRU)
+    fall back to feature-dim sharding.
+    """
+    ndim = len(shape)
+    spec: list = [None] * ndim
+    # leading dim is the stacked-periods axis; dim 1 is batch
+    if ndim >= 2 and shape[1] % mesh.shape[parallel.data_axis] == 0:
+        spec[1] = parallel.data_axis
+    m = mesh.shape[parallel.model_axis]
+    if ndim >= 4 and shape[-2] % m == 0 and shape[-2] >= 16 * m:
+        spec[-2] = parallel.model_axis      # seq dim (KV / MLA-latent cache)
+    elif shape[-1] % m == 0 and shape[-1] >= 16:
+        spec[-1] = parallel.model_axis      # feature dim (SSM/RG-LRU states)
+    return P(*spec)

@@ -1,0 +1,5 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU; see ops.py)."""
+from repro.kernels import ops, ref
+from repro.kernels.fingerprint import fingerprint_hash
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.probe import probe

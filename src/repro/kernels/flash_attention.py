@@ -1,0 +1,132 @@
+"""Pallas TPU kernel: flash attention (online softmax) for the LM stack.
+
+Covers every attention variant the assigned architectures need:
+GQA (q-head → kv-head mapping in the index_map, no materialized repeat),
+causal masking, sliding-window (gemma2/gemma3/recurrentgemma local layers)
+and logit soft-capping (gemma2).
+
+Grid: (batch·q_heads, Sq/BQ, Skv/BK) — the kv dimension is the innermost,
+sequentially-iterated axis; running max/denominator/accumulator live in VMEM
+scratch across kv steps (the canonical TPU flash schedule: the MXU consumes
+[BQ, D]×[D, BK] tiles while the VPU maintains the online softmax).
+Fully-masked kv blocks are skipped via the grid bounds (causal/window
+block-level early-out), which is where the memory-term win over naive
+attention comes from.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, window: int | None,
+                  logit_softcap: float | None, bq: int, bk: int,
+                  sq: int, skv: int):
+    kv_idx = pl.program_id(2)
+    q_idx = pl.program_id(1)
+    n_kv = pl.num_programs(2)
+
+    @pl.when(kv_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # Positions: queries right-aligned to keys (decode-friendly).
+    qpos = skv - sq + q_idx * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = kv_idx * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+
+    block_live = jnp.any(mask)
+
+    @pl.when(block_live)
+    def _step():
+        q = q_ref[0].astype(jnp.float32) * scale          # [bq, d]
+        k = k_ref[0].astype(jnp.float32)                  # [bk, d]
+        v = v_ref[0].astype(jnp.float32)                  # [bk, d]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # [bq, bk]
+        if logit_softcap is not None:
+            s = logit_softcap * jnp.tanh(s / logit_softcap)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]                               # [bq]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        p = jnp.where(mask, p, 0.0)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_cur
+
+    @pl.when(kv_idx == n_kv - 1)
+    def _finalize():
+        l = l_ref[...]
+        o_ref[0, ...] = (acc_ref[...] / jnp.maximum(l, 1e-30)[:, None]
+                         ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "logit_softcap", "scale", "bq", "bk",
+                     "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    logit_softcap: float | None = None,
+                    scale: float | None = None, bq: int = 128, bk: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """q: [B, Hq, Sq, D]; k, v: [B, Hkv, Skv, D] -> [B, Hq, Sq, D].
+
+    GQA is handled by the kv index_map (q head h reads kv head h // group);
+    no repeat is materialized in HBM.
+    """
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    assert hq % hkv == 0
+    group = hq // hkv
+    bq_ = min(bq, sq)
+    bk_ = min(bk, skv)
+    assert sq % bq_ == 0 and skv % bk_ == 0
+    scale_ = scale if scale is not None else d ** -0.5
+
+    qr = q.reshape(b * hq, sq, d)
+    kr = k.reshape(b * hkv, skv, d)
+    vr = v.reshape(b * hkv, skv, d)
+
+    def kv_map(h, i, j):
+        # flat q index h = batch * hq + qhead  ->  batch * hkv + qhead//group
+        return ((h // hq) * hkv + (h % hq) // group, j, 0)
+
+    grid = (b * hq, sq // bq_, skv // bk_)
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale_, causal=causal,
+                          window=window, logit_softcap=logit_softcap,
+                          bq=bq_, bk=bk_, sq=sq, skv=skv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq_, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk_, d), kv_map),
+            pl.BlockSpec((1, bk_, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, bq_, d), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq_, d), jnp.float32),   # acc
+            pltpu.VMEM((bq_,), jnp.float32),     # running max m
+            pltpu.VMEM((bq_,), jnp.float32),     # running denom l
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, hq, sq, d)

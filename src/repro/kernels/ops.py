@@ -1,0 +1,89 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Backend dispatch: Pallas-TPU lowers only on TPU; on the CPU host (this
+container, tests) kernels run in ``interpret=True`` mode and large-shape
+callers fall back to the pure-jnp oracle (``ref.py``), which is what the
+dry-run compiles.  ``use_pallas='auto'|'always'|'never'`` controls this.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.fingerprint import fingerprint_hash
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.probe import probe
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, mult: int):
+    n = x.shape[0]
+    pad = (-n) % mult
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,), x.dtype)])
+    return x, n
+
+
+def hash_keys(hi: jax.Array, lo: jax.Array, *, fp_bits: int, n_buckets: int,
+              use_pallas: str = "auto"):
+    """(fp, i1, i2) via the fingerprint kernel (padded to the block size)."""
+    if use_pallas == "never":
+        return ref.fingerprint_ref(hi, lo, fp_bits=fp_bits, n_buckets=n_buckets)
+    block = 1024 if hi.shape[0] >= 1024 else hi.shape[0]
+    hi_p, n = _pad_to(hi, block)
+    lo_p, _ = _pad_to(lo, block)
+    fp, i1, i2 = fingerprint_hash(hi_p, lo_p, fp_bits=fp_bits,
+                                  n_buckets=n_buckets, block=block,
+                                  interpret=not _on_tpu())
+    return fp[:n], i1[:n], i2[:n]
+
+
+def filter_lookup(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
+                  fp_bits: int, use_pallas: str = "auto") -> jax.Array:
+    """Bulk membership via the fused probe kernel."""
+    vmem_bytes = table.size * 4
+    if use_pallas == "never" or (use_pallas == "auto" and
+                                 (not _on_tpu() and hi.shape[0] > 65536)
+                                 or vmem_bytes > 12 * 2**20):
+        return ref.probe_ref(table, hi, lo, fp_bits=fp_bits)
+    block = 1024 if hi.shape[0] >= 1024 else hi.shape[0]
+    hi_p, n = _pad_to(hi, block)
+    lo_p, _ = _pad_to(lo, block)
+    hit = probe(table, hi_p, lo_p, fp_bits=fp_bits, block=block,
+                interpret=not _on_tpu())
+    return hit[:n]
+
+
+def attention(q, k, v, *, causal: bool = True, window: int | None = None,
+              logit_softcap: float | None = None, scale: float | None = None,
+              qpos_start=None, valid_len=None, key_positions=None,
+              use_pallas: str = "auto") -> jax.Array:
+    """Attention dispatcher.
+
+    TPU: Pallas flash kernel.  XLA path (CPU host / dry-run): window layers
+    use the O(S·W) chunked local path; everything else goes through
+    blockwise attention (never materializes SxS) — see ref.py docstrings.
+    """
+    if use_pallas == "always" or (use_pallas == "auto" and _on_tpu()):
+        if valid_len is None and qpos_start is None and key_positions is None:
+            return flash_attention(q, k, v, causal=causal, window=window,
+                                   logit_softcap=logit_softcap, scale=scale,
+                                   interpret=not _on_tpu())
+    sq, skv = q.shape[2], k.shape[2]
+    if (window is not None and causal and valid_len is None
+            and key_positions is None and sq == skv
+            and sq % window == 0 and sq > window):
+        return ref.local_attention(q, k, v, window=window,
+                                   logit_softcap=logit_softcap, scale=scale)
+    return ref.blockwise_attention(q, k, v, causal=causal, window=window,
+                                   logit_softcap=logit_softcap, scale=scale,
+                                   qpos_start=qpos_start, valid_len=valid_len,
+                                   key_positions=key_positions)
+
+
+__all__ = ["hash_keys", "filter_lookup", "attention", "fingerprint_hash",
+           "probe", "flash_attention"]

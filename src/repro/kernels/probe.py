@@ -1,0 +1,61 @@
+"""Pallas TPU kernel: fused hash + bucket-probe bulk lookup (the serving
+hot path of the OCF).
+
+Layout strategy (TPU adaptation of the paper's pointer-chasing lookup):
+  * the bucket table ``uint32[n_buckets, bucket_size]`` is block-resident in
+    VMEM — the BlockSpec index_map pins the whole table for every program
+    (capacity ≤ ~2M slots ⇒ ≤ 8 MB, inside the ~16 MB VMEM budget; larger
+    filters shard first — see core.distributed);
+  * keys are tiled ``(BLOCK,)`` over a 1-D grid, hashing is fused so a key is
+    read once from HBM and never revisited;
+  * both candidate buckets are gathered from VMEM and compared per lane —
+    2·bucket_size uint32 compares per key on the VPU, no MXU involvement.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.fingerprint import _mm3, _sm32
+
+DEFAULT_BLOCK = 1024
+
+
+def _probe_kernel(table_ref, hi_ref, lo_ref, hit_ref, *, fp_bits: int):
+    n_buckets = table_ref.shape[0]
+    hi = hi_ref[...]
+    lo = lo_ref[...]
+    h = _mm3(lo ^ _mm3(hi ^ jnp.uint32(0xDEADBEEF)))
+    fp = h & jnp.uint32((1 << fp_bits) - 1)
+    fp = jnp.where(fp == 0, jnp.uint32(1), fp)
+    i1 = (_sm32(lo) ^ _mm3(hi + jnp.uint32(0x51ED270B))) % jnp.uint32(n_buckets)
+    hfp = _sm32(fp) % jnp.uint32(n_buckets)
+    i2 = (hfp + jnp.uint32(n_buckets) - i1) % jnp.uint32(n_buckets)
+    b1 = table_ref[i1.astype(jnp.int32), :]   # [BLOCK, bucket_size] VMEM gather
+    b2 = table_ref[i2.astype(jnp.int32), :]
+    hit = jnp.any(b1 == fp[:, None], axis=-1) | jnp.any(b2 == fp[:, None], axis=-1)
+    hit_ref[...] = hit
+
+
+@functools.partial(jax.jit, static_argnames=("fp_bits", "block", "interpret"))
+def probe(table: jax.Array, hi: jax.Array, lo: jax.Array, *, fp_bits: int,
+          block: int = DEFAULT_BLOCK, interpret: bool = True) -> jax.Array:
+    """Bulk membership test -> bool[N].  N must be a block multiple."""
+    n = hi.shape[0]
+    block = min(block, n)
+    assert n % block == 0, f"{n=} not a multiple of {block=}"
+    n_buckets, bucket_size = table.shape
+    grid = (n // block,)
+    key_spec = pl.BlockSpec((block,), lambda i: (i,))
+    table_spec = pl.BlockSpec((n_buckets, bucket_size), lambda i: (0, 0))
+    return pl.pallas_call(
+        functools.partial(_probe_kernel, fp_bits=fp_bits),
+        grid=grid,
+        in_specs=[table_spec, key_spec, key_spec],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.bool_),
+        interpret=interpret,
+    )(table, hi.astype(jnp.uint32), lo.astype(jnp.uint32))

@@ -1,0 +1,174 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness references the kernel tests ``assert_allclose``
+against (shape/dtype sweeps in tests/test_kernels_*.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashing
+
+
+# ----------------------------------------------------------- fingerprint ---
+
+
+def fingerprint_ref(hi: jax.Array, lo: jax.Array, *, fp_bits: int,
+                    n_buckets: int):
+    """(fp, i1, i2) for a batch of keys — mirrors core.hashing exactly."""
+    fp = hashing.fingerprint(hi, lo, fp_bits)
+    i1 = hashing.index_hash(hi, lo, n_buckets)
+    i2 = hashing.alt_index(i1, fp, n_buckets)
+    return fp, i1, i2
+
+
+# ------------------------------------------------------------------ probe --
+
+
+def probe_ref(table: jax.Array, hi: jax.Array, lo: jax.Array, *, fp_bits: int
+              ) -> jax.Array:
+    """Bulk membership: bool[N]."""
+    n_buckets = table.shape[0]
+    fp, i1, i2 = fingerprint_ref(hi, lo, fp_bits=fp_bits, n_buckets=n_buckets)
+    hit1 = jnp.any(table[i1] == fp[:, None], axis=-1)
+    hit2 = jnp.any(table[i2] == fp[:, None], axis=-1)
+    return hit1 | hit2
+
+
+# -------------------------------------------------------- flash attention --
+
+
+def blockwise_attention(q, k, v, *, causal=True, window=None,
+                        logit_softcap=None, scale=None, qpos_start=None,
+                        valid_len=None, key_positions=None,
+                        q_chunk: int = 512):
+    """Memory-bounded attention: scan over q chunks, never materialize SxS.
+
+    The XLA analogue of the flash kernel's schedule (the Pallas kernel is the
+    TPU fast path; this is what the dry-run compiles).  Peak intermediate is
+    [B, H, q_chunk, Skv] instead of [B, H, Sq, Skv] — the difference between
+    prefill_32k fitting in HBM (67 MB/chunk/head) and needing 17 GB/device.
+
+    q: [B,Hq,Sq,Dk]; k: [B,Hkv,Skv,Dk]; v: [B,Hkv,Skv,Dv].  GQA via
+    q-head h -> kv-head h // group.  ``qpos_start``: traced offset of q
+    position 0 (decode); default right-aligned (Skv - Sq).  ``valid_len``:
+    number of valid cache entries (traced) — keys beyond it are masked.
+    """
+    b, hq, sq, dk = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    group = hq // hkv
+    scale = scale if scale is not None else dk ** -0.5
+    if qpos_start is None:
+        qpos_start = skv - sq
+    slot = jnp.arange(skv)
+    kpos = slot if key_positions is None else key_positions  # absolute pos
+    kvalid = kpos >= 0
+    if valid_len is not None:
+        kvalid &= slot < valid_len
+
+    qg = q.reshape(b, hkv, group, sq, dk).astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    def one_chunk(qc, qpos):
+        # qc: [b,hkv,group,C,dk]; qpos: [C]
+        logits = jnp.einsum("bhgqd,bhkd->bhgqk", qc, kf)
+        if logit_softcap is not None:
+            logits = logit_softcap * jnp.tanh(logits / logit_softcap)
+        mask = kvalid[None, :]
+        if causal:
+            mask = mask & (kpos[None, :] <= qpos[:, None])
+        if window is not None:
+            mask = mask & (kpos[None, :] > qpos[:, None] - window)
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        return jnp.einsum("bhgqk,bhkd->bhgqd", probs, vf)
+
+    c = min(q_chunk, sq)
+    if sq % c != 0 or sq == c:
+        out = one_chunk(qg, qpos_start + jnp.arange(sq))
+    else:
+        nc = sq // c
+        qcs = qg.reshape(b, hkv, group, nc, c, dk).transpose(3, 0, 1, 2, 4, 5)
+        qpos = qpos_start + jnp.arange(sq).reshape(nc, c)
+        outs = jax.lax.map(lambda t: one_chunk(*t), (qcs, qpos))
+        out = outs.transpose(1, 2, 3, 0, 4, 5).reshape(b, hkv, group, sq, dv)
+    return out.reshape(b, hq, sq, dv).astype(q.dtype)
+
+
+def local_attention(q, k, v, *, window: int, logit_softcap=None, scale=None):
+    """Sliding-window attention in O(S·W): chunk into window-sized tiles,
+    each q tile attends (self, previous) tiles only.
+
+    Requires Sq == Skv and Sq % window == 0 (callers fall back otherwise).
+    This is the XLA counterpart of the flash kernel's block-skip: compiled
+    FLOPs/bytes drop from O(S²) to O(S·2W) — the honest roofline for
+    gemma2/gemma3/recurrentgemma local layers.
+    """
+    b, hq, s, dk = q.shape
+    hkv = k.shape[1]
+    dv = v.shape[-1]
+    group = hq // hkv
+    w = window
+    nc = s // w
+    scale = scale if scale is not None else dk ** -0.5
+    qg = (q.reshape(b, hkv, group, nc, w, dk).astype(jnp.float32) * scale)
+    kf = k.reshape(b, hkv, nc, w, dk).astype(jnp.float32)
+    vf = v.reshape(b, hkv, nc, w, dv).astype(jnp.float32)
+    # previous tile (zeros before the first)
+    kprev = jnp.concatenate([jnp.zeros_like(kf[:, :, :1]), kf[:, :, :-1]], 2)
+    vprev = jnp.concatenate([jnp.zeros_like(vf[:, :, :1]), vf[:, :, :-1]], 2)
+    k2 = jnp.concatenate([kprev, kf], axis=3)        # [b,hkv,nc,2w,dk]
+    v2 = jnp.concatenate([vprev, vf], axis=3)
+    logits = jnp.einsum("bhgcqd,bhckd->bhgcqk", qg, k2)  # [b,hkv,g,nc,w,2w]
+    if logit_softcap is not None:
+        logits = logit_softcap * jnp.tanh(logits / logit_softcap)
+    qpos = jnp.arange(w)[:, None]
+    kpos = jnp.arange(2 * w)[None, :] - w
+    first = jnp.arange(nc) == 0                       # [nc]
+    base = (kpos <= qpos) & (kpos > qpos - w)         # causal ∩ window
+    inbounds = kpos >= 0
+    mask = base & (inbounds | ~first[:, None, None])  # [nc,w,2w]
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgcqk,bhckd->bhgcqd", probs, v2)
+    return out.reshape(b, hq, s, dv).astype(q.dtype)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int | None = None,
+                  logit_softcap: float | None = None,
+                  scale: float | None = None) -> jax.Array:
+    """Reference multi-head attention with GQA, sliding window and softcap.
+
+    q: [B, Hq, Sq, D]; k, v: [B, Hkv, Skv, D]; Hq % Hkv == 0.
+    ``window``: sliding-window size w — query i attends keys in (i-w, i].
+    Query positions are right-aligned to key positions (decode friendly:
+    q position = Skv - Sq + arange(Sq)).
+    """
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    assert hq % hkv == 0
+    group = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    kf = jnp.repeat(kf, group, axis=1)
+    vf = jnp.repeat(vf, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", qf, kf)
+    if logit_softcap is not None:
+        logits = logit_softcap * jnp.tanh(logits / logit_softcap)
+    qpos = skv - sq + jnp.arange(sq)
+    kpos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vf)
+    return out.astype(q.dtype)

@@ -1,0 +1,243 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+MUST be run as its own process (the device-count flag binds at first jax
+init).  For each cell this:
+  1. builds the production mesh (16×16 single-pod / 2×16×16 multi-pod),
+  2. lowers the step function against ShapeDtypeStruct inputs with the
+     sharding rules from repro.distributed.sharding,
+  3. compiles (proving the distribution config is coherent: no sharding
+     mismatches, no unsupported collectives, memory accounted),
+  4. records memory_analysis / cost_analysis / HLO collective bytes and the
+     derived roofline terms to artifacts/dryrun/<cell>.json.
+
+Usage:
+  python -m repro.launch.dryrun --arch mistral-nemo-12b --shape train_4k
+  python -m repro.launch.dryrun --all [--mesh single|multi|both] [--jobs N]
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+
+def _build(arch: str, shape_name: str, mesh_kind: str, knobs):
+    """Build (fn, arg_shapes, in_shardings, cfg, parallel) for one cell."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs.registry import SHAPES, get_config
+    from repro.distributed.sharding import (ParallelConfig, batch_pspec,
+                                            cache_pspec, make_shardings)
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import abstract_cache, abstract_init, batch_specs
+    from repro.models.transformer import Transformer
+    from repro.optim.adamw import AdamW, cosine_schedule
+    from repro.serving.engine import make_decode_step, make_prefill_step
+    from repro.train.step import make_train_step
+
+    cfg = get_config(arch)
+    seq, gbatch, mode = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    axis_sizes = tuple((n, int(mesh.shape[n])) for n in mesh.axis_names)
+    parallel = ParallelConfig(
+        axis_sizes=axis_sizes,
+        pod_axis="pod" if mesh_kind == "multi" else None,
+        pod_fsdp=knobs.get("pod_fsdp", False),
+        compress_grads=knobs.get("compress_grads", False),
+        remat=knobs.get("remat", "dots"),
+        microbatches=knobs.get("microbatches", 1),
+        seq_shard=knobs.get("seq_shard", False),
+        layout=knobs.get("layout", "tp_fsdp"),
+        ep_axis=knobs.get("ep_axis", "model"),
+    )
+    model = Transformer(cfg)
+    p_shapes, p_specs = abstract_init(model)
+    p_shard = make_shardings(mesh, p_specs, p_shapes, parallel)
+    b_specs = batch_specs(cfg, shape_name)
+    rep = NamedSharding(mesh, P())
+
+    def batch_shardings():
+        out = {}
+        for k, v in b_specs.items():
+            if v.ndim == 0:
+                out[k] = rep
+            else:
+                out[k] = NamedSharding(
+                    mesh, batch_pspec(v.shape[0], v.ndim, mesh, parallel,
+                                      seq_dim=1 if v.ndim >= 2 else None))
+        return out
+
+    if mode == "train":
+        tx = AdamW(lr=cosine_schedule(3e-4, 100, 10000))
+        step = make_train_step(model, tx, parallel)
+        o_shapes = jax.eval_shape(tx.init, p_shapes)
+        o_shard = jax.tree.map(
+            lambda s: (p_shard if hasattr(s, "shape") else None), o_shapes)
+        # AdamWState(step, m, v): m/v shard like params, step replicated
+        from repro.optim.adamw import AdamWState
+        o_shard = AdamWState(step=rep, m=p_shard, v=p_shard)
+        args = (p_shapes, o_shapes, b_specs)
+        in_sh = (p_shard, o_shard, batch_shardings())
+        return step, args, in_sh, cfg, parallel, mesh
+
+    # Serving runs bf16 weights (no f32 masters at inference) — halves every
+    # FSDP weight-gather on the decode/prefill paths (§Perf dsv2/iter2).
+    p_shapes = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16)
+        if s.dtype == jnp.float32 else s, p_shapes)
+    # long-context decode: local-attention slots use window-sized ring
+    # buffers (the 500k KV never exists for windowed layers)
+    cache_shapes = abstract_cache(model, gbatch, seq, dtype=jnp.bfloat16,
+                                  window_bound=(shape_name == "long_500k"))
+    c_shard = jax.tree.map(
+        lambda s: NamedSharding(mesh, cache_pspec(s.shape, mesh, parallel)),
+        cache_shapes)
+    bs = batch_shardings()
+    if mode == "prefill":
+        step = make_prefill_step(model, parallel)
+        kwargs_keys = [k for k in ("memory", "prefix_embeds") if k in b_specs]
+
+        def fn(params, cache, tokens, *extra):
+            kw = dict(zip(kwargs_keys, extra))
+            return step(params, cache, tokens, **kw)
+
+        extra_shapes = tuple(b_specs[k] for k in kwargs_keys)
+        extra_sh = tuple(bs[k] for k in kwargs_keys)
+        args = (p_shapes, cache_shapes, b_specs["tokens"], *extra_shapes)
+        in_sh = (p_shard, c_shard, bs["tokens"], *extra_sh)
+        return fn, args, in_sh, cfg, parallel, mesh
+
+    step = make_decode_step(model, parallel)
+    kwargs_keys = [k for k in ("memory",) if k in b_specs]
+
+    def fn(params, cache, token, pos, *extra):
+        kw = dict(zip(kwargs_keys, extra))
+        return step(params, cache, token, pos, **kw)
+
+    extra_shapes = tuple(b_specs[k] for k in kwargs_keys)
+    extra_sh = tuple(bs[k] for k in kwargs_keys)
+    args = (p_shapes, cache_shapes, b_specs["token"], b_specs["pos"],
+            *extra_shapes)
+    in_sh = (p_shard, c_shard, bs["token"], rep, *extra_sh)
+    return fn, args, in_sh, cfg, parallel, mesh
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
+             knobs=None, tag: str = "") -> dict:
+    from repro.roofline.analysis import (Roofline, model_flops_for,
+                                         parse_collectives)
+
+    knobs = knobs or {}
+    t0 = time.time()
+    fn, args, in_sh, cfg, parallel, mesh = _build(arch, shape_name, mesh_kind,
+                                                  knobs)
+    chips = mesh.devices.size
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=in_sh).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    cost = compiled.cost_analysis() or {}
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    try:
+        ma = compiled.memory_analysis()
+        mem = {
+            "argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+            "output_bytes": getattr(ma, "output_size_in_bytes", None),
+            "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(ma, "peak_memory_in_bytes", None),
+        }
+    except Exception:  # noqa: BLE001 — backend may not support it
+        mem = {}
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo)
+    n_active = cfg.active_param_count()
+    # Loop-weighted terms from the HLO walker (XLA's cost_analysis counts
+    # while bodies ONCE — useless for scanned-layer models; see
+    # roofline/analysis.py).  cost_analysis values kept as *_unweighted.
+    rl = Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_kind, chips=chips,
+        flops_per_dev=float(coll.flops), bytes_per_dev=float(coll.hbm_bytes),
+        wire_bytes_per_dev=float(coll.wire_bytes),
+        model_flops=model_flops_for(cfg, shape_name, n_active),
+        collectives={"by_op": coll.by_op, "count": coll.count,
+                     "operand_bytes": coll.operand_bytes},
+        memory_stats=mem,
+    ).finalize()
+    rec = rl.to_dict()
+    rec.update({
+        "params_total": cfg.param_count(),
+        "params_active": n_active,
+        "flops_per_dev_unweighted": flops,
+        "bytes_per_dev_unweighted": byts,
+        "t_lower_s": round(t_lower, 2),
+        "t_compile_s": round(t_compile, 2),
+        "knobs": knobs,
+        "hlo_bytes": len(hlo),
+    })
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        name = f"{arch}__{shape_name}__{mesh_kind}{tag}.json"
+        with open(os.path.join(out_dir, name), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--remat", default="dots",
+                    choices=["none", "full", "dots"])
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--pod-fsdp", action="store_true")
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--seq-shard", action="store_true")
+    ap.add_argument("--layout", default="tp_fsdp",
+                    choices=["tp_fsdp", "fsdp_only", "tp_only"])
+    ap.add_argument("--ep-axis", default="model", choices=["model", "data"])
+    args = ap.parse_args()
+    knobs = {"remat": args.remat, "microbatches": args.microbatches,
+             "pod_fsdp": args.pod_fsdp, "compress_grads": args.compress_grads,
+             "seq_shard": args.seq_shard, "layout": args.layout,
+             "ep_axis": args.ep_axis}
+
+    from repro.configs.registry import canonical, cells
+
+    if args.all:
+        todo = [(a, s) for a, s, ok in cells() if ok]
+    else:
+        todo = [(canonical(args.arch), args.shape)]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    failures = 0
+    for arch, shape in todo:
+        for mk in meshes:
+            try:
+                rec = run_cell(arch, shape, mk, args.out, knobs, args.tag)
+                print(f"OK   {arch:26s} {shape:12s} {mk:6s} "
+                      f"Tc={rec['t_compute']:.4f}s Tm={rec['t_memory']:.4f}s "
+                      f"Tx={rec['t_collective']:.4f}s "
+                      f"bn={rec['bottleneck']:10s} mfu={rec['mfu']:.3f} "
+                      f"compile={rec['t_compile_s']}s", flush=True)
+            except Exception as e:  # noqa: BLE001
+                failures += 1
+                print(f"FAIL {arch} {shape} {mk}: {e}", flush=True)
+                traceback.print_exc()
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

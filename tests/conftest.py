@@ -1,0 +1,11 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.RandomState(0)
+
+
+def random_keys(rng, n, lo=0, hi=2 ** 63):
+    return rng.randint(lo, hi, size=n, dtype=np.int64).astype(np.uint64)

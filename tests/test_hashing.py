@@ -1,0 +1,62 @@
+"""Hash-primitive tests: numpy/jax agreement, involution, distribution."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hashing
+
+from conftest import random_keys
+
+
+def test_numpy_jax_agreement(rng):
+    keys = random_keys(rng, 4096)
+    hi, lo = hashing.key_to_u32_pair_np(keys)
+    for fp_bits in (8, 12, 16, 24, 32):
+        fnp = hashing.fingerprint_np(hi, lo, fp_bits)
+        fj = np.asarray(hashing.fingerprint(jnp.asarray(hi), jnp.asarray(lo),
+                                            fp_bits))
+        np.testing.assert_array_equal(fnp, fj)
+    for n in (7, 256, 1000, 1 << 20):
+        inp = hashing.index_hash_np(hi, lo, n)
+        ij = np.asarray(hashing.index_hash(jnp.asarray(hi), jnp.asarray(lo), n))
+        np.testing.assert_array_equal(inp, ij)
+
+
+@pytest.mark.parametrize("n_buckets", [2, 7, 256, 1000, 4096, 999983])
+def test_alt_index_involution(rng, n_buckets):
+    """alt(alt(i)) == i for ANY bucket count (the non-pow2 requirement)."""
+    keys = random_keys(rng, 2048)
+    hi, lo = hashing.key_to_u32_pair_np(keys)
+    fp = hashing.fingerprint_np(hi, lo, 16)
+    i1 = hashing.index_hash_np(hi, lo, n_buckets)
+    i2 = hashing.alt_index_np(i1, fp, n_buckets)
+    i1_back = hashing.alt_index_np(i2, fp, n_buckets)
+    np.testing.assert_array_equal(i1 % n_buckets, i1_back)
+    assert (i2 < n_buckets).all()
+
+
+def test_fingerprint_never_zero(rng):
+    keys = random_keys(rng, 1 << 16)
+    hi, lo = hashing.key_to_u32_pair_np(keys)
+    for fp_bits in (4, 8, 16):
+        fp = hashing.fingerprint_np(hi, lo, fp_bits)
+        assert (fp != 0).all()
+        assert (fp < (1 << fp_bits)).all()
+
+
+def test_index_distribution_uniform(rng):
+    keys = random_keys(rng, 1 << 16)
+    hi, lo = hashing.key_to_u32_pair_np(keys)
+    idx = hashing.index_hash_np(hi, lo, 64)
+    counts = np.bincount(idx, minlength=64)
+    # chi-square-ish bound: each bucket within 25% of the mean
+    mean = keys.size / 64
+    assert (np.abs(counts - mean) < 0.25 * mean).all()
+
+
+def test_owner_shard_matches_jax(rng):
+    keys = random_keys(rng, 1024)
+    hi, lo = hashing.key_to_u32_pair_np(keys)
+    a = hashing.owner_shard_np(hi, lo, 16)
+    b = np.asarray(hashing.owner_shard(jnp.asarray(hi), jnp.asarray(lo), 16))
+    np.testing.assert_array_equal(a, b)

@@ -1,0 +1,114 @@
+"""Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles
+(interpret mode executes the kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hashing
+from repro.core import filter as jf
+from repro.kernels import ref
+from repro.kernels.fingerprint import fingerprint_hash
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.probe import probe
+
+from conftest import random_keys
+
+
+def _pair(keys):
+    hi, lo = hashing.key_to_u32_pair_np(keys)
+    return jnp.asarray(hi), jnp.asarray(lo)
+
+
+@pytest.mark.parametrize("n,block", [(1024, 256), (4096, 1024), (512, 512)])
+@pytest.mark.parametrize("fp_bits", [8, 16, 24])
+@pytest.mark.parametrize("n_buckets", [777, 1024, 65536])
+def test_fingerprint_kernel_sweep(rng, n, block, fp_bits, n_buckets):
+    hi, lo = _pair(random_keys(rng, n))
+    fp, i1, i2 = fingerprint_hash(hi, lo, fp_bits=fp_bits,
+                                  n_buckets=n_buckets, block=block,
+                                  interpret=True)
+    rfp, ri1, ri2 = ref.fingerprint_ref(hi, lo, fp_bits=fp_bits,
+                                        n_buckets=n_buckets)
+    np.testing.assert_array_equal(np.asarray(fp), np.asarray(rfp))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(ri1))
+    np.testing.assert_array_equal(np.asarray(i2), np.asarray(ri2))
+
+
+@pytest.mark.parametrize("n_buckets,bucket_size", [(256, 4), (1024, 4),
+                                                   (513, 8)])
+def test_probe_kernel_sweep(rng, n_buckets, bucket_size):
+    keys = random_keys(rng, 2048)
+    hi, lo = _pair(keys)
+    st = jf.make_state(n_buckets, bucket_size)
+    st, ok = jf.bulk_insert(st, hi, lo, fp_bits=16)
+    probes = np.concatenate([keys, random_keys(rng, 2048)])
+    phi, plo = _pair(probes)
+    got = probe(st.table, phi, plo, fp_bits=16, block=1024, interpret=True)
+    want = ref.probe_ref(st.table, phi, plo, fp_bits=16)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+ATTN_CASES = [
+    # b, hq, hkv, sq, skv, d, causal, window, softcap
+    (2, 4, 2, 128, 128, 64, True, None, None),
+    (1, 8, 1, 256, 256, 64, True, 64, None),      # GQA 8:1 + window
+    (2, 2, 2, 128, 256, 128, True, None, 30.0),   # softcap + longer kv
+    (1, 4, 4, 1, 384, 64, True, None, None),      # decode-style q
+    (1, 2, 1, 128, 128, 32, False, None, None),   # non-causal (cross-attn)
+]
+
+
+@pytest.mark.parametrize("case", ATTN_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(rng, case, dtype):
+    b, hq, hkv, sq, skv, d, causal, window, cap = case
+    q = jnp.asarray(rng.randn(b, hq, sq, d), dtype)
+    k = jnp.asarray(rng.randn(b, hkv, skv, d), dtype)
+    v = jnp.asarray(rng.randn(b, hkv, skv, d), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          logit_softcap=cap, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal, window=window,
+                             logit_softcap=cap)
+    tol = 2e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_local_attention_matches_full(rng):
+    for (s, w) in [(256, 64), (512, 128), (128, 128)]:
+        q = jnp.asarray(rng.randn(2, 4, s, 32), jnp.float32)
+        k = jnp.asarray(rng.randn(2, 2, s, 32), jnp.float32)
+        v = jnp.asarray(rng.randn(2, 2, s, 32), jnp.float32)
+        if s > w:
+            got = ref.local_attention(q, k, v, window=w)
+        else:
+            got = ref.blockwise_attention(q, k, v, causal=True, window=w)
+        want = ref.attention_ref(q, k, v, causal=True, window=w)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-6, rtol=2e-6)
+
+
+def test_blockwise_matches_full_with_chunking(rng):
+    q = jnp.asarray(rng.randn(1, 4, 1024, 32), jnp.float32)
+    k = jnp.asarray(rng.randn(1, 2, 1024, 32), jnp.float32)
+    v = jnp.asarray(rng.randn(1, 2, 1024, 32), jnp.float32)
+    got = ref.blockwise_attention(q, k, v, causal=True, q_chunk=128)
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-6, rtol=2e-6)
+
+
+def test_ops_filter_lookup_pallas_vs_ref(rng):
+    from repro.kernels import ops
+    keys = random_keys(rng, 3000)
+    hi, lo = _pair(keys)
+    st = jf.make_state(1024, 4)
+    st, _ = jf.bulk_insert(st, hi, lo, fp_bits=16)
+    a = np.asarray(ops.filter_lookup(st.table, hi, lo, fp_bits=16,
+                                     use_pallas="always"))
+    b = np.asarray(ops.filter_lookup(st.table, hi, lo, fp_bits=16,
+                                     use_pallas="never"))
+    np.testing.assert_array_equal(a, b)
+    assert a.all()

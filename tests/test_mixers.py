@@ -1,0 +1,99 @@
+"""SSM (SSD) and RG-LRU mixers against naive sequential recurrences."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import ssm as ssm_mod
+from repro.models import rglru as rglru_mod
+
+KEY = jax.random.PRNGKey(0)
+
+
+def naive_ssd(x, dt, A, B, C):
+    """Sequential h_{t} = h_{t-1} * exp(dt_t A) + dt_t B_t x_t ; y = C_t h."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    rep = h // B.shape[2]
+    Br = np.repeat(np.asarray(B), rep, axis=2)
+    Cr = np.repeat(np.asarray(C), rep, axis=2)
+    xn, dtn, An = map(np.asarray, (x, dt, A))
+    hst = np.zeros((b, h, p, n))
+    ys = np.zeros((b, s, h, p))
+    for t in range(s):
+        decay = np.exp(dtn[:, t] * An[None, :])          # [b,h]
+        hst = hst * decay[..., None, None] + np.einsum(
+            "bhp,bhn->bhpn", xn[:, t] * dtn[:, t][..., None], Br[:, t])
+        ys[:, t] = np.einsum("bhpn,bhn->bhp", hst, Cr[:, t])
+    return ys, hst
+
+
+@pytest.mark.parametrize("s,chunk", [(32, 8), (64, 16), (64, 64)])
+def test_ssd_chunked_matches_naive(s, chunk):
+    rng = np.random.RandomState(0)
+    b, h, p, g, n = 2, 4, 8, 1, 16
+    x = jnp.asarray(rng.randn(b, s, h, p), jnp.float32)
+    dt = jnp.asarray(np.abs(rng.randn(b, s, h)) * 0.1, jnp.float32)
+    A = jnp.asarray(-np.abs(rng.randn(h)), jnp.float32)
+    B = jnp.asarray(rng.randn(b, s, g, n), jnp.float32)
+    C = jnp.asarray(rng.randn(b, s, g, n), jnp.float32)
+    y, final = ssm_mod.ssd_chunked(x, dt, A, B, C, chunk=chunk)
+    y_ref, h_ref = naive_ssd(x, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(y), y_ref, atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(final), h_ref, atol=1e-3, rtol=1e-3)
+
+
+def test_ssm_decode_matches_prefill():
+    cfg = get_smoke_config("mamba2_1p3b")
+    p, _ = ssm_mod.init_ssm(KEY, cfg)
+    B, S = 2, 16
+    x = 0.1 * jax.random.normal(KEY, (B, S, cfg.d_model), jnp.float32)
+    full, _ = ssm_mod.apply_ssm(p, cfg, x)
+    cache = ssm_mod.init_ssm_cache(cfg, B)
+    ys = []
+    for t in range(S):
+        y, cache = ssm_mod.apply_ssm(p, cfg, x[:, t:t + 1], cache=cache)
+        ys.append(y)
+    step = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(step), np.asarray(full),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_ssm_prefill_state_handoff():
+    cfg = get_smoke_config("mamba2_1p3b")
+    p, _ = ssm_mod.init_ssm(KEY, cfg)
+    B, S = 1, 64
+    x = 0.1 * jax.random.normal(KEY, (B, S, cfg.d_model), jnp.float32)
+    full, _ = ssm_mod.apply_ssm(p, cfg, x)
+    cache = ssm_mod.init_ssm_cache(cfg, B)
+    y1, cache = ssm_mod.apply_ssm(p, cfg, x[:, :32], cache=cache)
+    y2, cache = ssm_mod.apply_ssm(p, cfg, x[:, 32:], cache=cache)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(full), atol=2e-3, rtol=2e-3)
+
+
+def test_rglru_scan_matches_sequential():
+    cfg = get_smoke_config("recurrentgemma_2b")
+    p, _ = rglru_mod.init_rglru(KEY, cfg)
+    B, S = 2, 24
+    x = 0.1 * jax.random.normal(KEY, (B, S, cfg.d_model), jnp.float32)
+    full, _ = rglru_mod.apply_rglru(p, cfg, x)
+    cache = rglru_mod.init_rglru_cache(cfg, B)
+    ys = []
+    for t in range(S):
+        y, cache = rglru_mod.apply_rglru(p, cfg, x[:, t:t + 1], cache=cache)
+        ys.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(ys, 1)),
+                               np.asarray(full), atol=1e-4, rtol=1e-4)
+
+
+def test_moe_exact_routing_no_drops():
+    from repro.models import moe as moe_mod
+    cfg = get_smoke_config("qwen3_moe_235b_a22b")
+    p, _ = moe_mod.init_moe(KEY, cfg)
+    x = 0.1 * jax.random.normal(KEY, (4, 1, cfg.d_model), jnp.float32)
+    y, aux = moe_mod.apply_moe(p, cfg, x, exact=True)
+    assert y.shape == x.shape
+    # exact routing: output must differ from shared-only (tokens routed)
+    assert float(jnp.max(jnp.abs(y))) > 0

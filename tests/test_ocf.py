@@ -1,0 +1,80 @@
+"""OCF end-to-end: resize-on-burst, verified deletes, no false negatives."""
+import numpy as np
+import pytest
+
+from repro.core import OCF, OcfConfig
+from repro.core.metrics import (measure_false_negatives,
+                                measure_false_positives, theoretical_fp_rate)
+
+from conftest import random_keys
+
+
+@pytest.mark.parametrize("mode", ["PRE", "EOF"])
+def test_burst_insert_grows_and_keeps_all_keys(rng, mode):
+    ocf = OCF(OcfConfig(capacity=2048, mode=mode))
+    keys = random_keys(rng, 10000)
+    for i in range(0, keys.size, 1000):
+        ok = ocf.insert(keys[i:i + 1000])
+        assert ok.all()
+    assert ocf.count == keys.size
+    assert ocf.lookup(keys).all(), "no false negatives ever"
+    assert ocf.stats.resizes >= 1
+    assert ocf.occupancy <= 0.96
+
+
+@pytest.mark.parametrize("mode", ["PRE", "EOF"])
+def test_delete_churn_shrinks(rng, mode):
+    ocf = OCF(OcfConfig(capacity=2048, mode=mode, c_min=1024))
+    keys = random_keys(rng, 8000)
+    for i in range(0, keys.size, 1000):
+        ocf.insert(keys[i:i + 1000])
+    cap_peak = ocf.capacity
+    for i in range(0, 7500, 500):
+        ocf.delete(keys[i:i + 500])
+    assert ocf.capacity < cap_peak, f"{mode} must shrink after delete churn"
+    survivors = keys[7500:]
+    assert ocf.lookup(survivors).all()
+
+
+def test_blind_delete_blocked(rng):
+    """Paper §IV: deleting a never-inserted key must not corrupt others."""
+    ocf = OCF(OcfConfig(capacity=4096))
+    keys = random_keys(rng, 1000)
+    ocf.insert(keys)
+    foreign = random_keys(rng, 1000)
+    present = ocf.delete(foreign)
+    # (collisions between random 64-bit draws are ~impossible)
+    assert not present.any()
+    assert ocf.stats.blind_deletes_blocked == 1000
+    assert ocf.lookup(keys).all(), "no resident key lost to a blind delete"
+
+
+def test_false_positive_rate_and_zero_false_negatives(rng):
+    ocf = OCF(OcfConfig(capacity=8192, mode="EOF"))
+    keys = random_keys(rng, 4000)
+    ocf.insert(keys)
+    assert measure_false_negatives(ocf, keys) == 0
+    probes = random_keys(rng, 50000)
+    fps = measure_false_positives(ocf, probes)
+    bound = theoretical_fp_rate(4, 16, 1.0) * probes.size * 20 + 5
+    assert fps <= bound
+
+
+def test_emergency_grow_on_full(rng):
+    ocf = OCF(OcfConfig(capacity=1024, mode="PRE", o_max=0.999, o_min=0.0))
+    # o_max ~1.0 disables predictive resize; filter must self-heal on fail
+    keys = random_keys(rng, 5000)
+    ok = ocf.insert(keys)
+    assert ok.all()
+    assert ocf.lookup(keys).all()
+    assert ocf.capacity >= 5000
+
+
+def test_capacity_history_tracks_traffic(rng):
+    ocf = OCF(OcfConfig(capacity=2048, mode="EOF"))
+    keys = random_keys(rng, 6000)
+    ocf.insert(keys[:3000])
+    ocf.insert(keys[3000:])
+    for i in range(0, 5000, 500):
+        ocf.delete(keys[i:i + 500])
+    assert len(ocf.capacity_history) == ocf.stats.resizes + 1

@@ -1,0 +1,72 @@
+"""PRE / EOF resize-policy unit tests (paper Alg. 1 semantics)."""
+import pytest
+
+from repro.core.policy import EofPolicy, PrePolicy, O_SAFE
+
+
+def test_pre_grows_by_doubling():
+    p = PrePolicy(o_max=0.85, o_min=0.25, c_min=1024)
+    d = p.observe(items=900, capacity=1024)
+    assert d is not None and d.reason == "grow" and d.new_capacity == 2048
+
+
+def test_pre_shrinks_by_tenth():
+    p = PrePolicy(o_max=0.85, o_min=0.25, c_min=1024)
+    d = p.observe(items=500, capacity=4096)
+    assert d is not None and d.reason == "shrink"
+    assert d.new_capacity == 4096 - 4096 // 10
+
+
+def test_pre_respects_c_bounds():
+    p = PrePolicy(c_min=2048, c_max=4096)
+    assert p.observe(items=100, capacity=2048) is None  # at c_min
+    d = p.observe(items=4000, capacity=4096)
+    assert d is None  # at c_max, growth clamps back to c_max -> no-op
+
+
+def test_pre_unsafe_shrink_prevented():
+    p = PrePolicy(o_max=0.85, o_min=0.25, c_min=16)
+    # shrink by 10% would exceed safe load: clamp keeps occupancy <= O_SAFE
+    d = p.observe(items=230, capacity=1024)
+    assert d is None or d.new_capacity * O_SAFE >= 230
+
+
+def test_eof_requires_marker_arming():
+    p = EofPolicy(k_min=0.35, k_max=0.75, o_max=0.85, o_min=0.25)
+    # crossing k_max arms monitoring but does not resize
+    assert p.observe(items=790, capacity=1024, ops=10) is None
+    assert p.monitoring
+    # occupancy recedes into the marker band: disarm
+    assert p.observe(items=500, capacity=1024, ops=10) is None
+    assert not p.monitoring
+
+
+def test_eof_resize_after_threshold_cross():
+    p = EofPolicy(k_min=0.35, k_max=0.75, o_max=0.85, o_min=0.25, gain=1 / 16)
+    assert p.observe(items=790, capacity=1024, ops=100) is None  # arm
+    d = p.observe(items=900, capacity=1024, ops=200)             # cross O_max
+    assert d is not None and d.reason == "grow"
+    assert d.new_capacity > 1024
+    assert 0.0 < d.alpha <= 1.0
+
+
+def test_eof_alpha_ewma_rises_with_faster_bursts():
+    p = EofPolicy(k_min=0.35, k_max=0.75, o_max=0.85, o_min=0.25, gain=0.25)
+    p.observe(items=790, capacity=1024, ops=1000)
+    d1 = p.observe(items=900, capacity=1024, ops=1000)   # slow window
+    a1 = d1.alpha
+    c = d1.new_capacity
+    # second, much faster burst (fewer marked ops to cross)
+    p.observe(items=int(c * 0.80), capacity=c, ops=10)
+    d2 = p.observe(items=int(c * 0.90), capacity=c, ops=10)
+    assert d2 is not None
+    assert d2.alpha > a1, "rate ratio M>1 must raise alpha (burst prediction)"
+
+
+def test_eof_shrink_branch():
+    p = EofPolicy(k_min=0.35, k_max=0.75, o_max=0.85, o_min=0.25, c_min=256)
+    p.observe(items=300, capacity=1024, ops=50)   # below k_min arms
+    d = p.observe(items=200, capacity=1024, ops=50)  # below o_min
+    assert d is not None and d.reason == "shrink"
+    assert d.new_capacity < 1024
+    assert d.new_capacity * O_SAFE >= 200 or d.clamped

@@ -1,0 +1,73 @@
+"""Hypothesis property tests on the system's core invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import OCF, OcfConfig, PyCuckooFilter, hashing
+
+keys_strategy = st.lists(st.integers(min_value=0, max_value=2 ** 64 - 1),
+                         min_size=1, max_size=300, unique=True)
+
+
+@settings(max_examples=30, deadline=None)
+@given(keys=keys_strategy)
+def test_no_false_negatives_after_any_insert_set(keys):
+    f = PyCuckooFilter(n_buckets=512, bucket_size=4, fp_bits=16)
+    arr = np.array(keys, dtype=np.uint64)
+    ok = f.bulk_insert(arr)
+    assert f.bulk_lookup(arr[ok]).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(keys=keys_strategy, n_del=st.integers(0, 300))
+def test_delete_subset_invariant(keys, n_del):
+    """After deleting any subset, the remainder is still found."""
+    f = PyCuckooFilter(n_buckets=512, bucket_size=4, fp_bits=16)
+    arr = np.array(keys, dtype=np.uint64)
+    ok = f.bulk_insert(arr)
+    ins = arr[ok]
+    n_del = min(n_del, ins.size)
+    f.bulk_delete(ins[:n_del])
+    assert f.bulk_lookup(ins[n_del:]).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(keys=keys_strategy)
+def test_count_is_exact(keys):
+    f = PyCuckooFilter(n_buckets=1024, bucket_size=4, fp_bits=16)
+    arr = np.array(keys, dtype=np.uint64)
+    ok = f.bulk_insert(arr)
+    assert f.count == int(ok.sum())
+    del_ok = f.bulk_delete(arr)
+    # every inserted key deletes exactly once (duplicates impossible: unique)
+    assert f.count == int(ok.sum()) - int(del_ok.sum())
+
+
+@settings(max_examples=20, deadline=None)
+@given(keys=keys_strategy,
+       n_buckets=st.sampled_from([64, 100, 257, 1024]))
+def test_alt_index_involution_property(keys, n_buckets):
+    arr = np.array(keys, dtype=np.uint64)
+    hi, lo = hashing.key_to_u32_pair_np(arr)
+    fp = hashing.fingerprint_np(hi, lo, 16)
+    i1 = hashing.index_hash_np(hi, lo, n_buckets)
+    i2 = hashing.alt_index_np(i1, fp, n_buckets)
+    back = hashing.alt_index_np(i2, fp, n_buckets)
+    np.testing.assert_array_equal(i1, back)
+
+
+@settings(max_examples=10, deadline=None)
+@given(keys=st.lists(st.integers(0, 2 ** 64 - 1), min_size=50, max_size=200,
+                     unique=True),
+       mode=st.sampled_from(["PRE", "EOF"]))
+def test_ocf_occupancy_always_safe(keys, mode):
+    """System invariant: the controller never lets occupancy exceed O_SAFE."""
+    ocf = OCF(OcfConfig(capacity=1024, mode=mode, c_min=1024))
+    arr = np.array(keys, dtype=np.uint64)
+    for i in range(0, arr.size, 37):
+        ocf.insert(arr[i:i + 37])
+        assert ocf.occupancy <= 0.96
+    for i in range(0, arr.size, 53):
+        ocf.delete(arr[i:i + 53])
+        assert ocf.occupancy <= 0.96
+    assert ocf.count == 0 or ocf.lookup(
+        arr[ocf.count and 0:1]) is not None

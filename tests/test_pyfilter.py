@@ -1,0 +1,56 @@
+"""Oracle cuckoo-filter semantics."""
+import numpy as np
+import pytest
+
+from repro.core import PyCuckooFilter
+
+from conftest import random_keys
+
+
+def test_insert_lookup_no_false_negatives(rng):
+    f = PyCuckooFilter(n_buckets=2048, bucket_size=4, fp_bits=16)
+    keys = random_keys(rng, 4000)
+    ok = f.bulk_insert(keys)
+    assert ok.all()
+    assert f.bulk_lookup(keys).all()
+
+
+def test_false_positive_rate_bounded(rng):
+    f = PyCuckooFilter(n_buckets=2048, bucket_size=4, fp_bits=16)
+    keys = random_keys(rng, 4000)
+    f.bulk_insert(keys)
+    absent = random_keys(rng, 20000)
+    fp_rate = f.bulk_lookup(absent).mean()
+    # theory: ~2*b*O/2^f = 2*4*0.49/65536 ~ 6e-5; allow 10x headroom
+    assert fp_rate < 6e-4
+
+
+def test_delete_removes_and_preserves_others(rng):
+    f = PyCuckooFilter(n_buckets=1024, bucket_size=4, fp_bits=16)
+    keys = random_keys(rng, 2000)
+    f.bulk_insert(keys)
+    assert f.bulk_delete(keys[:1000]).all()
+    assert f.bulk_lookup(keys[1000:]).all()
+    assert f.count == 1000
+
+
+def test_insert_failure_rolls_back(rng):
+    f = PyCuckooFilter(n_buckets=8, bucket_size=4, fp_bits=16,
+                       max_displacements=16)
+    keys = random_keys(rng, 200)
+    ok = f.bulk_insert(keys)
+    assert not ok.all(), "tiny filter must eventually fill"
+    inserted = keys[ok]
+    # Transactional failure: everything successfully inserted still present.
+    assert f.bulk_lookup(inserted).all()
+    assert f.count == int(ok.sum())
+
+
+def test_duplicate_keys_supported(rng):
+    f = PyCuckooFilter(n_buckets=256, bucket_size=4, fp_bits=16)
+    key = random_keys(rng, 1)
+    for _ in range(5):
+        assert f.insert(int(key[0]))
+    for _ in range(5):
+        assert f.delete(int(key[0]))
+    assert not f.lookup(int(key[0]))

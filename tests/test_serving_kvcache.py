@@ -1,0 +1,50 @@
+"""OCF prefix-cache index tests (paper integration in the serving path)."""
+import numpy as np
+import pytest
+
+from repro.serving.kvcache import PrefixCacheIndex, block_hashes
+
+
+def test_block_hashes_prefix_sensitivity(rng):
+    t1 = rng.randint(0, 1000, 256).astype(np.int32)
+    t2 = t1.copy()
+    t2[3] = (t2[3] + 1) % 1000  # perturb inside block 0
+    k1, k2 = block_hashes(t1, 64), block_hashes(t2, 64)
+    assert k1.shape == (4,)
+    assert (k1 != k2).all(), "rolling hash: all downstream blocks change"
+    t3 = t1.copy()
+    t3[200] += 1  # perturb inside block 3 only
+    k3 = block_hashes(t3, 64)
+    assert (k1[:3] == k3[:3]).all() and k1[3] != k3[3]
+
+
+def test_match_admit_evict_cycle(rng):
+    idx = PrefixCacheIndex(block=32)
+    prompt = rng.randint(0, 1000, 256).astype(np.int32)
+    assert idx.match_prefix(prompt) == 0
+    idx.admit(prompt)
+    assert idx.match_prefix(prompt) == 8
+    # extension shares the prefix
+    longer = np.concatenate([prompt, rng.randint(0, 1000, 64).astype(np.int32)])
+    assert idx.match_prefix(longer) == 8
+    idx.evict(prompt)
+    assert idx.match_prefix(prompt) == 0
+
+
+def test_lru_eviction_deletes_from_filter(rng):
+    idx = PrefixCacheIndex(block=32, max_blocks=8)
+    for _ in range(6):
+        idx.admit(rng.randint(0, 1000, 128).astype(np.int32))
+    assert idx.stats.evicted > 0
+    assert len(idx._lru) <= 8
+    assert idx.ocf.stats.deletes > 0
+
+
+def test_burst_admission_resizes_filter(rng):
+    from repro.core.ocf import OcfConfig
+    idx = PrefixCacheIndex(OcfConfig(capacity=1024, mode="EOF"), block=16,
+                           max_blocks=1 << 20)
+    for _ in range(40):  # burst of distinct prompts
+        idx.admit(rng.randint(0, 10000, 512).astype(np.int32))
+    assert idx.ocf.stats.resizes >= 1, "EOF must grow under admission burst"
+    assert idx.ocf.occupancy <= 0.96

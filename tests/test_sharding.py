@@ -1,0 +1,95 @@
+"""Sharding-rule unit tests + a small-mesh pjit lowering check."""
+import json
+import subprocess
+import sys
+import textwrap
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import (ParallelConfig, batch_pspec,
+                                        cache_pspec, spec_to_pspec)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return jax.make_mesh((1, 1), ("data", "model"), devices=jax.devices()[:1],
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def test_mlp_weight_spec(mesh):
+    pc = ParallelConfig()
+    got = spec_to_pspec(("layers", "embed", "mlp"), (4, 64, 128), mesh, pc)
+    assert got == P(None, "data", "model")
+
+
+def test_expert_weight_spec_priority(mesh):
+    pc = ParallelConfig()
+    # expert takes the model axis; mlp falls back to replication
+    got = spec_to_pspec(("layers", "expert", "embed", "mlp"),
+                        (4, 8, 64, 128), mesh, pc)
+    assert got == P(None, "model", "data")  # trailing Nones trimmed
+
+
+def test_non_divisible_falls_back_to_replication(mesh):
+    pc = ParallelConfig()
+    got = spec_to_pspec(("embed", "heads"), (63, 33), mesh, pc)
+    # 1x1 mesh: everything divides; use a fake mesh via shape math instead
+    assert got == P("data", "model")
+
+
+def test_batch_pspec_small_batch(mesh):
+    pc = ParallelConfig()
+    assert batch_pspec(16, 2, mesh, pc) == P("data", None)
+    # batch=1 cannot shard over data>1 — replicate (long_500k case) —
+    # with a 1x1 mesh everything divides, so emulate via ndim/seq rules
+    assert batch_pspec(1, 2, mesh, pc)[0] in ("data", None)
+
+
+def test_cache_pspec_context_parallel(mesh):
+    pc = ParallelConfig()
+    # KV cache [n, B, Hkv, S, D]: batch over data, SEQ over model (context-
+    # parallel decode; EXPERIMENTS.md §Perf dsv2/iter4)
+    got = cache_pspec((4, 8, 2, 128, 64), mesh, pc)
+    assert got[1] == "data" and got[-2] == "model" and got[-1] is None
+    # stateful caches without a long seq dim fall back to feature sharding
+    got2 = cache_pspec((4, 8, 64), mesh, pc)
+    assert got2[-1] == "model"
+
+
+MULTIAXIS = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.sharding import (ParallelConfig, batch_pspec,
+                                            spec_to_pspec)
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    pc = ParallelConfig(pod_axis="pod")
+    out = {}
+    out["w"] = str(spec_to_pspec(("embed", "mlp"), (64, 128), mesh, pc))
+    out["w_nodiv"] = str(spec_to_pspec(("embed", "mlp"), (63, 128), mesh, pc))
+    out["batch"] = str(batch_pspec(16, 2, mesh, pc))
+    out["batch1"] = str(batch_pspec(1, 2, mesh, pc))
+    pcf = ParallelConfig(pod_axis="pod", pod_fsdp=True)
+    out["w_podfsdp"] = str(spec_to_pspec(("embed", "mlp"), (64, 128), mesh,
+                                         pcf))
+    print(json.dumps(out))
+""")
+
+
+def test_multiaxis_rules_subprocess():
+    r = subprocess.run([sys.executable, "-c", MULTIAXIS], capture_output=True,
+                       text=True, timeout=300,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "HOME": "/root"})
+    assert r.returncode == 0, r.stderr[-2000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert out["w"] == "PartitionSpec('data', 'model')"
+    assert out["w_nodiv"] == "PartitionSpec(None, 'model')"
+    assert out["batch"] == "PartitionSpec(('pod', 'data'), None)"
+    assert out["batch1"] == "PartitionSpec(None, None)"
+    assert out["w_podfsdp"] == "PartitionSpec(('pod', 'data'), 'model')"
