@@ -1,0 +1,145 @@
+"""Filter data-plane microbenchmark (ISSUE 1 satellite).
+
+Reports lookup / insert / delete keys-per-second through ``FilterOps`` for
+each backend, plus the keystore comparison that motivated the OCF rework:
+the seed kept a Python ``dict`` and looped ``for k in keys.tolist()`` per
+insert and a list-comprehension membership check per delete; the vectorized
+``VectorKeystore`` replaces both with numpy batch ops.  Results land in
+``BENCH_filter.json`` so later PRs have a perf trajectory.
+
+Run directly (``PYTHONPATH=src python benchmarks/filter_bench.py``) or via
+``benchmarks/run.py``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing
+from repro.core import filter as jf
+from repro.core.filter_ops import FilterOps
+from repro.core.keystore import VectorKeystore
+from repro.core.ocf import OCF, OcfConfig
+
+# Anchored to the repo root so run.py writes the same trajectory file no
+# matter which directory it is invoked from.
+JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_filter.json")
+KEYSTORE_BATCH = 1 << 17          # ≥100k keys (acceptance criterion)
+
+
+def _pair(rng, n):
+    keys = rng.randint(0, 2 ** 63, size=n, dtype=np.int64).astype(np.uint64)
+    hi, lo = hashing.key_to_u32_pair_np(keys)
+    return keys, jnp.asarray(hi), jnp.asarray(lo)
+
+
+def _time(f, *a, reps=3, **kw):
+    f(*a, **kw)  # warm the jit/kernel cache
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        r = f(*a, **kw)
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / reps
+
+
+def _legacy_keystore_add(store: dict, keys: np.ndarray) -> None:
+    """The seed's per-key Python loop (core/ocf.py at PR 0), verbatim."""
+    for k in keys.tolist():
+        store[k] = store.get(k, 0) + 1
+
+
+def _legacy_keystore_delete_check(store: dict, keys: np.ndarray) -> np.ndarray:
+    """The seed's list-comprehension membership check, verbatim."""
+    return np.array([store.get(int(k), 0) > 0 for k in keys])
+
+
+def backend_rows(rng, *, backends=("jnp", "pallas"), n_buckets=1 << 14,
+                 n=1 << 15):
+    """(name, us_per_call, keys_per_s) rows per backend x op."""
+    rows, results = [], {}
+    _keys, hi, lo = _pair(rng, n)
+    for backend in backends:
+        fops = FilterOps(fp_bits=16, backend=backend)
+        base = jf.make_state(n_buckets, 4)
+        loaded, _ = fops.insert(base, hi, lo)   # ~50% load
+
+        t = _time(fops.lookup, loaded, hi, lo)
+        rows.append((f"filter_lookup_{backend}", t / n * 1e6, int(n / t)))
+        results[f"lookup_{backend}_keys_per_s"] = int(n / t)
+
+        t = _time(lambda: fops.insert(base, hi, lo))
+        rows.append((f"filter_insert_{backend}", t / n * 1e6, int(n / t)))
+        results[f"insert_{backend}_keys_per_s"] = int(n / t)
+
+        t = _time(lambda: fops.delete(loaded, hi, lo))
+        rows.append((f"filter_delete_{backend}", t / n * 1e6, int(n / t)))
+        results[f"delete_{backend}_keys_per_s"] = int(n / t)
+    return rows, results
+
+
+def keystore_rows(rng, *, n=KEYSTORE_BATCH):
+    """Vectorized keystore vs the seed per-key dict loop on one big batch."""
+    keys = rng.randint(0, 2 ** 63, size=n, dtype=np.int64).astype(np.uint64)
+
+    t0 = time.perf_counter()
+    legacy: dict[int, int] = {}
+    _legacy_keystore_add(legacy, keys)
+    _legacy_keystore_delete_check(legacy, keys)
+    t_legacy = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    ks = VectorKeystore()
+    ks.add(keys)
+    ks.remove(keys)
+    t_vec = time.perf_counter() - t0
+
+    rows = [
+        ("keystore_legacy_dict_loop", t_legacy / n * 1e6, int(n / t_legacy)),
+        ("keystore_vectorized", t_vec / n * 1e6, int(n / t_vec)),
+    ]
+    results = {
+        "keystore_batch": int(n),
+        "keystore_legacy_dict_loop_s": t_legacy,
+        "keystore_vectorized_s": t_vec,
+        "keystore_speedup": t_legacy / t_vec,
+    }
+    return rows, results
+
+
+def ocf_insert_rows(rng, *, n=KEYSTORE_BATCH):
+    """End-to-end OCF.insert on a ≥100k-key burst (vectorized keystore)."""
+    keys = rng.randint(0, 2 ** 63, size=n, dtype=np.int64).astype(np.uint64)
+    ocf = OCF(OcfConfig(capacity=2 * n, backend="auto"))
+    ocf.insert(keys[:1024])   # warm the jit cache at this buffer size
+    t0 = time.perf_counter()
+    ocf.insert(keys[1024:])
+    t = time.perf_counter() - t0
+    kps = int((n - 1024) / t)
+    rows = [("ocf_insert_burst", t / (n - 1024) * 1e6, kps)]
+    return rows, {"ocf_insert_burst_keys": int(n),
+                  "ocf_insert_burst_keys_per_s": kps}
+
+
+def run(json_path: str | None = JSON_PATH):
+    rng = np.random.RandomState(0)
+    rows, results = [], {"backend_default": jax.default_backend()}
+    for fn in (backend_rows, keystore_rows, ocf_insert_rows):
+        r, res = fn(rng)
+        rows += r
+        results.update(res)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for name, us, derived in run():
+        print(f"{name},{us:.3f},{derived}")

@@ -5,6 +5,8 @@ Prints ``name,us_per_call,derived`` CSV (deliverable d).  Sections:
   fig2_*     — paper Fig. 2 (burst-insert throughput, incl. unmanaged filter)
   fig3_*     — paper Fig. 3 (capacity trendlines, PRE/EOF ratio)
   bulk_*     — TPU-adapted filter data-plane microbenches
+  filter_*   — FilterOps per-backend lookup/insert/delete + keystore compare
+               (also writes BENCH_filter.json — the perf trajectory file)
   prefix_* / ocf_* — serving-path OCF integration
   roofline_* — per (arch x shape x mesh) dry-run roofline summary (if
                artifacts/dryrun has been populated by launch/dryrun.py)
@@ -19,11 +21,12 @@ def main() -> None:
     ap.add_argument("--skip-roofline", action="store_true")
     args = ap.parse_args()
 
-    from benchmarks import bulk_ops, paper_tables, serving_bench
+    from benchmarks import bulk_ops, filter_bench, paper_tables, serving_bench
 
     rows = []
     rows += paper_tables.run(full=args.full)
     rows += bulk_ops.run()
+    rows += filter_bench.run()
     rows += serving_bench.run()
     if not args.skip_roofline:
         from benchmarks import roofline_report

@@ -52,10 +52,7 @@ def save(ckpt_dir: str, step: int, tree, *, ocf: Optional[OCF] = None,
         names[k] = {"file": fn, "dtype": dtype_name}
     if ocf is not None:
         np.save(os.path.join(tmp, "ocf_table.npy"), np.asarray(ocf.state.table))
-        keys = np.fromiter((k for k, m in ocf._keys.items()
-                            for _ in range(m)), dtype=np.uint64,
-                           count=sum(ocf._keys.values()))
-        np.save(os.path.join(tmp, "ocf_keys.npy"), keys)
+        np.save(os.path.join(tmp, "ocf_keys.npy"), ocf.keystore.materialize())
     manifest = {"step": step, "leaves": names, "extra": extra or {},
                 "has_ocf": ocf is not None}
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
@@ -107,7 +104,7 @@ def restore(ckpt_dir: str, step: int, like_tree, *,
 def restore_ocf(ckpt_dir: str, step: int, ocf: OCF) -> OCF:
     path = os.path.join(ckpt_dir, f"step_{step:08d}")
     keys = np.load(os.path.join(path, "ocf_keys.npy"))
-    ocf._keys.clear()
+    ocf.keystore.clear()
     if keys.size:
         ocf.insert(keys)
     return ocf

@@ -2,12 +2,15 @@
 from repro.core.filter import (FilterState, bulk_delete, bulk_insert,
                                bulk_insert_hybrid, bulk_lookup, make_state,
                                parallel_insert_once, rebuild)
+from repro.core.filter_ops import FilterOps
+from repro.core.keystore import VectorKeystore
 from repro.core.ocf import OCF, OcfConfig, OcfStats
 from repro.core.policy import EofPolicy, PrePolicy, ResizeDecision
 from repro.core.pyfilter import PyCuckooFilter
 
 __all__ = [
     "OCF", "OcfConfig", "OcfStats", "EofPolicy", "PrePolicy", "ResizeDecision",
-    "PyCuckooFilter", "FilterState", "make_state", "bulk_lookup", "bulk_insert",
-    "bulk_delete", "bulk_insert_hybrid", "parallel_insert_once", "rebuild",
+    "PyCuckooFilter", "FilterState", "FilterOps", "VectorKeystore",
+    "make_state", "bulk_lookup", "bulk_insert", "bulk_delete",
+    "bulk_insert_hybrid", "parallel_insert_once", "rebuild",
 ]

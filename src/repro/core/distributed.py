@@ -27,6 +27,12 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import hashing
+from repro.core.filter_ops import FilterOps
+
+try:                                  # jax >= 0.6 exports it at top level
+    _shard_map = jax.shard_map
+except AttributeError:                # 0.4.x: experimental namespace
+    from jax.experimental.shard_map import shard_map as _shard_map
 
 
 class ShardedFilterState(NamedTuple):
@@ -40,25 +46,26 @@ def make_sharded_state(n_shards: int, n_buckets: int, bucket_size: int = 4
         tables=jnp.zeros((n_shards, n_buckets, bucket_size), dtype=jnp.uint32))
 
 
-def _local_probe(table, hi, lo, fp_bits: int):
-    n_buckets = table.shape[0]
-    fp = hashing.fingerprint(hi, lo, fp_bits)
-    i1 = hashing.index_hash(hi, lo, n_buckets)
-    i2 = hashing.alt_index(i1, fp, n_buckets)
-    hit = (jnp.any(table[i1] == fp[:, None], axis=-1)
-           | jnp.any(table[i2] == fp[:, None], axis=-1))
-    return hit
+def _local_probe(table, hi, lo, fp_bits: int, backend: str = "jnp"):
+    """Per-shard membership probe, routed through the FilterOps data plane
+    (same backend dispatch as the single-node OCF hot path)."""
+    return FilterOps(fp_bits=fp_bits, backend=backend).probe_table(
+        table, hi, lo)
 
 
 def distributed_lookup(mesh: Mesh, axis: str, state: ShardedFilterState,
                        hi: jax.Array, lo: jax.Array, *, fp_bits: int,
-                       capacity_factor: float = 2.0):
+                       capacity_factor: float = 2.0, backend: str = "jnp"):
     """Batched membership across filter shards.
 
     ``hi``/``lo``: uint32[n_shards * per_shard] keys, sharded over ``axis``.
     Returns (hits bool[N], overflow int32[] per-shard overflow count).
     Overflowed keys answer True ("maybe") — conservative for dedup/caching,
     and the overflow count is the congestion signal for the EOF policy.
+
+    ``backend`` selects the local-probe data plane ("jnp" | "pallas" |
+    "auto"); the default stays on the jnp path, which is what shard_map
+    traces on CPU hosts (a sharded Pallas probe is an open item).
     """
     n_shards = mesh.shape[axis]
     per_shard = hi.shape[0] // n_shards
@@ -92,7 +99,7 @@ def distributed_lookup(mesh: Mesh, axis: str, state: ShardedFilterState,
         r_lo = jax.lax.all_to_all(buf_lo, axis, 0, 0, tiled=False)
         r_valid = jax.lax.all_to_all(valid, axis, 0, 0, tiled=False)
         hit = _local_probe(table, r_hi.reshape(-1), r_lo.reshape(-1),
-                           fp_bits).reshape(n_shards, cap)
+                           fp_bits, backend).reshape(n_shards, cap)
         hit = jnp.where(r_valid, hit, False)
         # Route answers back.
         back = jax.lax.all_to_all(hit, axis, 0, 0, tiled=False)  # [n_shards, cap]
@@ -102,7 +109,7 @@ def distributed_lookup(mesh: Mesh, axis: str, state: ShardedFilterState,
         del my
         return ans, overflow[None]
 
-    fn = jax.shard_map(
+    fn = _shard_map(
         shard_fn, mesh=mesh,
         in_specs=(P(axis), P(axis), P(axis)),
         out_specs=(P(axis), P(axis)))
@@ -115,9 +122,9 @@ def local_shard_insert_host(state: ShardedFilterState, shard: int, table
     return ShardedFilterState(tables=state.tables.at[shard].set(table))
 
 
-@functools.partial(jax.jit, static_argnames=("fp_bits",))
+@functools.partial(jax.jit, static_argnames=("fp_bits", "backend"))
 def replicated_lookup(tables: jax.Array, hi: jax.Array, lo: jax.Array, *,
-                      fp_bits: int) -> jax.Array:
+                      fp_bits: int, backend: str = "jnp") -> jax.Array:
     """Probe every shard (broadcast query — 'is this key anywhere?')."""
-    hit = jax.vmap(lambda t: _local_probe(t, hi, lo, fp_bits))(tables)
+    hit = jax.vmap(lambda t: _local_probe(t, hi, lo, fp_bits, backend))(tables)
     return jnp.any(hit, axis=0)

@@ -209,18 +209,25 @@ def parallel_insert_once(state: FilterState, hi, lo, *, fp_bits: int,
     return FilterState(table, count, state.n_buckets), placed
 
 
+@functools.partial(jax.jit, static_argnames=("fp_bits", "max_disp"))
 def bulk_insert_hybrid(state: FilterState, hi, lo, *, fp_bits: int,
                        max_disp: int = 500, valid=None
                        ) -> tuple[FilterState, jax.Array]:
-    """Parallel optimistic round + sequential fallback for the residue.
+    """Parallel optimistic round + mask-driven sequential fallback.
+
+    Fully jitted end-to-end: the residue mask drives the scan fallback on
+    device (lanes already placed are skipped per-step), so there is **no
+    host sync** between the rounds — the seed version pulled
+    ``bool(jnp.any(residue))`` back to the host for every batch, which
+    serialized the insert pipeline on device->host latency.
 
     Membership semantics are order-independent, so only the table layout may
     differ from pure-sequential — membership answers do not."""
+    if valid is None:
+        valid = jnp.ones(hi.shape, bool)
     state, placed = parallel_insert_once(state, hi, lo, fp_bits=fp_bits,
                                          valid=valid)
-    residue = (~placed) if valid is None else (valid & ~placed)
-    if not bool(jnp.any(residue)):
-        return state, placed
+    residue = valid & ~placed
     state2, ok2 = bulk_insert(state, hi, lo, fp_bits=fp_bits,
                               max_disp=max_disp, valid=residue)
     return state2, placed | ok2

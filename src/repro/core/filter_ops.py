@@ -1,0 +1,136 @@
+"""`FilterOps` — the single backend-dispatched filter data plane.
+
+Every consumer of the cuckoo-filter data plane goes through this layer: the
+OCF control plane (``core.ocf``), the serving prefix-cache index
+(``serving.kvcache``), and the sharded lookup path (``core.distributed``).
+One ``backend`` flag flips the whole stack:
+
+  * ``"jnp"``    — the pure-jnp jitted bulk ops (``core.filter``): XLA
+                   gather/scatter lookups, optimistic parallel insert round
+                   with a mask-driven lax.scan eviction fallback.
+  * ``"pallas"`` — the fused TPU kernels (``kernels.probe`` for lookups,
+                   ``kernels.insert`` for the optimistic insert round): hash
+                   and probe fused so each key is read from HBM once, table
+                   VMEM-resident, active capacity as an SMEM scalar.  The
+                   eviction-chain fallback and deletes still run on the
+                   lax.scan path — device-side eviction chains are an open
+                   kernel gap (ROADMAP "Open items").
+  * ``"auto"``   — pallas on TPU when the table fits the kernel VMEM budget,
+                   jnp otherwise (CPU hosts interpret Pallas, which is only
+                   worth it for validation, not throughput).
+
+All ops speak (hi, lo) uint32 key pairs and the dynamic-capacity
+``FilterState`` (active ``n_buckets`` inside a preallocated pow2 buffer), so
+a single FilterOps instance serves every resize the OCF schedule produces
+with a warm jit cache.  Both backends implement the *same* hash spec
+(``core.hashing`` — the kernels import it directly) and are parity-tested
+bit-for-bit against each other and the ``pyfilter`` oracle.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import filter as jfilter
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+Backend = Literal["jnp", "pallas", "auto"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FilterOps:
+    """Backend-dispatched lookup / insert / delete / rebuild entry points."""
+
+    fp_bits: int = 16
+    max_disp: int = 500
+    backend: Backend = "auto"
+
+    def __post_init__(self):
+        assert self.backend in ("jnp", "pallas", "auto"), (
+            f"unknown filter backend {self.backend!r} "
+            "(expected 'jnp' | 'pallas' | 'auto')")
+
+    # -------------------------------------------------------- dispatch --
+
+    def resolve(self, table: jax.Array) -> str:
+        """Concrete backend for this table ('auto' -> hardware decision)."""
+        if self.backend != "auto":
+            return self.backend
+        if kops._on_tpu() and table.size * 4 <= kops.VMEM_TABLE_BUDGET:
+            return "pallas"
+        return "jnp"
+
+    # ------------------------------------------------------------- ops --
+
+    def lookup(self, state: jfilter.FilterState, hi: jax.Array,
+               lo: jax.Array) -> jax.Array:
+        """Membership for a batch -> bool[N]."""
+        if self.resolve(state.table) == "pallas":
+            return kops.filter_lookup(state.table, hi, lo,
+                                      fp_bits=self.fp_bits,
+                                      n_buckets=state.n_buckets,
+                                      use_pallas="always")
+        return jfilter.bulk_lookup(state, hi, lo, fp_bits=self.fp_bits)
+
+    def insert(self, state: jfilter.FilterState, hi: jax.Array,
+               lo: jax.Array, valid: Optional[jax.Array] = None
+               ) -> tuple[jfilter.FilterState, jax.Array]:
+        """Hybrid insert -> (state, ok[N]).
+
+        Optimistic single round on the chosen backend, then the residue mask
+        drives the eviction-chain scan on device — no host sync in between.
+        """
+        if self.resolve(state.table) == "pallas":
+            if valid is None:
+                valid = jnp.ones(hi.shape, bool)
+            table, placed = kops.filter_insert(
+                state.table, hi, lo, fp_bits=self.fp_bits,
+                n_buckets=state.n_buckets, valid=valid, use_pallas="always")
+            mid = jfilter.FilterState(
+                table, state.count + jnp.sum(placed, dtype=jnp.int32),
+                state.n_buckets)
+            state2, ok2 = jfilter.bulk_insert(
+                mid, hi, lo, fp_bits=self.fp_bits, max_disp=self.max_disp,
+                valid=valid & ~placed)
+            return state2, placed | ok2
+        return jfilter.bulk_insert_hybrid(state, hi, lo, fp_bits=self.fp_bits,
+                                          max_disp=self.max_disp, valid=valid)
+
+    def delete(self, state: jfilter.FilterState, hi: jax.Array,
+               lo: jax.Array, valid: Optional[jax.Array] = None
+               ) -> tuple[jfilter.FilterState, jax.Array]:
+        """Verified bulk delete -> (state, ok[N]).
+
+        Always the lax.scan path — a fused delete kernel is an open item
+        (deletes are rare on the serving path relative to probes)."""
+        return jfilter.bulk_delete(state, hi, lo, fp_bits=self.fp_bits,
+                                   valid=valid)
+
+    def rebuild(self, hi: jax.Array, lo: jax.Array, n_buckets: int,
+                bucket_size: int, *, buffer_buckets: Optional[int] = None,
+                valid: Optional[jax.Array] = None
+                ) -> tuple[jfilter.FilterState, jax.Array]:
+        """Re-insert a keystore batch into a fresh table (resize path)."""
+        state = jfilter.make_state(n_buckets, bucket_size,
+                                   buffer_buckets=buffer_buckets)
+        return self.insert(state, hi, lo, valid=valid)
+
+    # ------------------------------------------------- raw-table probes --
+
+    def probe_table(self, table: jax.Array, hi: jax.Array, lo: jax.Array, *,
+                    n_buckets=None) -> jax.Array:
+        """Membership probe on a raw table (distributed shards / replicas).
+
+        Same dispatch as ``lookup`` but stateless — ``core.distributed``
+        probes stacked per-shard tables inside shard_map with this.
+        """
+        if self.resolve(table) == "pallas":
+            return kops.filter_lookup(table, hi, lo, fp_bits=self.fp_bits,
+                                      n_buckets=n_buckets,
+                                      use_pallas="always")
+        return kref.probe_ref(table, hi, lo, fp_bits=self.fp_bits,
+                              n_buckets=n_buckets)

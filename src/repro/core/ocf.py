@@ -1,18 +1,22 @@
 """OCF — the Optimized Cuckoo Filter (paper §II).
 
-Host-side control plane + JAX data plane:
+Host-side control plane + backend-dispatched data plane:
 
-  * data plane: jitted bulk lookup/insert/delete over a device-resident
-    table with a **dynamic active capacity inside a preallocated pow2
-    buffer** (repro.core.filter) — resizes change no shapes, so the jit
-    cache stays warm across the whole EOF schedule; device calls are
-    fixed-``CHUNK`` batches with validity masks (one compile per buffer
-    size, ever).
+  * data plane: every lookup/insert/delete/rebuild goes through
+    ``repro.core.filter_ops.FilterOps`` — one dispatch layer over the
+    pure-jnp bulk ops and the fused Pallas kernels, selected by
+    ``OcfConfig.backend`` ("jnp" | "pallas" | "auto").  The table is a
+    device-resident **dynamic active capacity inside a preallocated pow2
+    buffer** — resizes change no shapes, so the jit/kernel cache stays warm
+    across the whole EOF schedule; device calls are fixed-``CHUNK`` batches
+    with validity masks (one compile per buffer size, ever).
   * control plane: PRE or EOF resize policy; on a resize decision (or an
     insert failure = filter full) the table is **rebuilt from the backing
     keystore** at the new capacity.  The keystore also makes deletes safe:
     only keys it contains reach the filter (the paper's fix for
-    blind-delete corruption).
+    blind-delete corruption).  The keystore itself is a vectorized numpy
+    multiset (``core.keystore.VectorKeystore``) — no per-key Python loops
+    anywhere on the batch path.
 """
 from __future__ import annotations
 
@@ -22,9 +26,11 @@ from typing import Literal
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import filter as jfilter
 from repro.core import hashing
+from repro.core.filter_ops import Backend, FilterOps
+from repro.core.keystore import VectorKeystore
 from repro.core.policy import EofPolicy, PrePolicy, ResizeDecision
+from repro.core import filter as jfilter
 
 SNAP_BUCKETS = 256
 CHUNK = 4096
@@ -32,13 +38,14 @@ CHUNK = 4096
 
 @dataclasses.dataclass
 class OcfConfig:
-    """Paper §II-B parameters."""
+    """Paper §II-B parameters (+ the data-plane backend switch)."""
 
     capacity: int = 1 << 16          # item slots; paper: 2× expected items
     bucket_size: int = 4             # paper-recommended
     fp_bits: int = 16
     max_displacements: int = 500
     mode: Literal["PRE", "EOF"] = "EOF"
+    backend: Backend = "auto"        # filter data plane: jnp | pallas | auto
     o_max: float = 0.85              # Max Occupancy
     o_min: float = 0.25              # Min Occupancy
     k_min: float = 0.35              # K markers (EOF)
@@ -54,6 +61,11 @@ class OcfConfig:
         return EofPolicy(o_max=self.o_max, o_min=self.o_min, k_min=self.k_min,
                          k_max=self.k_max, gain=self.gain, c_min=self.c_min,
                          c_max=self.c_max)
+
+    def make_filter_ops(self) -> FilterOps:
+        return FilterOps(fp_bits=self.fp_bits,
+                         max_disp=self.max_displacements,
+                         backend=self.backend)
 
 
 @dataclasses.dataclass
@@ -83,7 +95,8 @@ class OCF:
     def __init__(self, config: OcfConfig | None = None):
         self.config = config or OcfConfig()
         self.policy = self.config.make_policy()
-        self._keys: dict[int, int] = {}  # key -> multiplicity
+        self.ops = self.config.make_filter_ops()
+        self.keystore = VectorKeystore()
         active = self._snap_buckets(self.config.capacity)
         buf = _pow2_at_least(active)
         self.state = jfilter.make_state(active, self.config.bucket_size,
@@ -114,7 +127,7 @@ class OCF:
         return self.count / self.capacity
 
     def __len__(self) -> int:
-        return sum(self._keys.values())
+        return self.keystore.total
 
     # ---------------------------------------------------------- chunking --
 
@@ -139,8 +152,7 @@ class OCF:
         out = np.zeros(keys.size, bool)
         off = 0
         for hi, lo, _valid, n in self._chunks(keys):
-            hits = jfilter.bulk_lookup(self.state, hi, lo,
-                                       fp_bits=self.config.fp_bits)
+            hits = self.ops.lookup(self.state, hi, lo)
             out[off:off + n] = np.asarray(hits)[:n]
             off += n
         return out
@@ -150,21 +162,25 @@ class OCF:
         keys = np.asarray(keys, dtype=np.uint64)
         self.stats.inserts += keys.size
         self._maybe_resize(extra=keys.size, ops=keys.size)
-        for k in keys.tolist():
-            self._keys[k] = self._keys.get(k, 0) + 1
-        all_ok = True
+        self.keystore.add(keys)
+        # Queue every chunk on device first; the ok masks are stacked on
+        # device and pulled back in ONE host transfer after the whole batch
+        # (the seed synced per chunk, serializing on device->host latency).
+        oks, ns = [], []
         for hi, lo, valid, n in self._chunks(keys):
-            state, ok = jfilter.bulk_insert_hybrid(
-                self.state, hi, lo, fp_bits=self.config.fp_bits,
-                max_disp=self.config.max_displacements, valid=valid)
+            state, ok = self.ops.insert(self.state, hi, lo, valid=valid)
             self.state = state
-            if not bool(np.asarray(ok)[:n].all()):
-                all_ok = False
-                self.stats.failed_inserts += int(
-                    (~np.asarray(ok)[:n]).sum())
-        if not all_ok:
+            oks.append(ok)
+            ns.append(n)
+        failed = 0
+        if oks:
+            ok_all = np.asarray(jnp.stack(oks))
+            failed = sum(int((~ok_all[i, :n]).sum())
+                         for i, n in enumerate(ns))
+        if failed:
             # Emergency grow + rebuild; the keystore already holds the whole
             # batch, so the rebuild IS the retry (never double-insert).
+            self.stats.failed_inserts += failed
             self._resize(ResizeDecision(
                 new_capacity=min(self.capacity * 2, self.config.c_max),
                 reason="grow"))
@@ -172,27 +188,22 @@ class OCF:
 
     def delete(self, keys) -> np.ndarray:
         """Verified delete (paper §IV): only keystore-present keys reach the
-        filter, so foreign fingerprints are never removed."""
+        filter, so foreign fingerprints are never removed.  The presence
+        check is one vectorized keystore op, not a per-key loop."""
         keys = np.asarray(keys, dtype=np.uint64)
         self.stats.deletes += keys.size
-        present = np.array([self._keys.get(int(k), 0) > 0 for k in keys])
+        present = self.keystore.remove(keys)
         self.stats.blind_deletes_blocked += int((~present).sum())
         victims = keys[present]
         if victims.size:
-            for k in victims.tolist():
-                self._keys[k] -= 1
-                if self._keys[k] <= 0:
-                    del self._keys[k]
-            for hi, lo, valid, n in self._chunks(victims):
-                state, _ok = jfilter.bulk_delete(
-                    self.state, hi, lo, fp_bits=self.config.fp_bits,
-                    valid=valid)
+            for hi, lo, valid, _n in self._chunks(victims):
+                state, _ok = self.ops.delete(self.state, hi, lo, valid=valid)
                 self.state = state
         self._maybe_resize(ops=keys.size)
         return present
 
     def contains_key_exact(self, key: int) -> bool:
-        return self._keys.get(int(key), 0) > 0
+        return self.keystore.contains(int(key))
 
     # ---------------------------------------------------------- control --
 
@@ -203,16 +214,12 @@ class OCF:
             self._resize(decision)
 
     def _rebuild_into(self, active_buckets: int, buffer_buckets: int) -> bool:
-        keys = np.fromiter(
-            (k for k, m in self._keys.items() for _ in range(m)),
-            dtype=np.uint64, count=sum(self._keys.values()))
+        keys = self.keystore.materialize()
         state = jfilter.make_state(active_buckets, self.config.bucket_size,
                                    buffer_buckets=buffer_buckets)
         ok_all = True
         for hi, lo, valid, n in self._chunks(keys):
-            state, ok = jfilter.bulk_insert_hybrid(
-                state, hi, lo, fp_bits=self.config.fp_bits,
-                max_disp=self.config.max_displacements, valid=valid)
+            state, ok = self.ops.insert(state, hi, lo, valid=valid)
             ok_all = ok_all and bool(np.asarray(ok)[:n].all())
         if ok_all:
             self.state = state

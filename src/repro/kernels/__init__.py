@@ -2,4 +2,5 @@
 from repro.kernels import ops, ref
 from repro.kernels.fingerprint import fingerprint_hash
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.insert import insert_once
 from repro.kernels.probe import probe

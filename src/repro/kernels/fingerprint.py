@@ -4,9 +4,13 @@ Pure VPU bit-mixing over uint32 lanes (no 64-bit ints on TPU — DESIGN.md §2).
 Keys are tiled over a 1-D grid; each program mixes a ``(BLOCK,)`` tile held in
 VMEM and emits three tiles: fingerprint, home bucket i1, alternate bucket i2.
 
+The hash family itself lives in ``repro.core.hashing`` — the kernel body
+calls the exact same jnp functions the host data plane uses, so there is ONE
+spec of the hash math in the repo and the kernels can never drift from the
+numpy oracle (``hashing.*_np``) that ``pyfilter`` validates against.
+
 This is the front half of every filter operation; fused into the probe
-kernel for lookups, standalone for the insert path (the eviction chain runs
-in lax on the host-of-record, which only needs the hashes).
+kernel for lookups and the optimistic-insert kernel for placements.
 """
 from __future__ import annotations
 
@@ -16,45 +20,19 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-_M3_C1 = 0x85EBCA6B
-_M3_C2 = 0xC2B2AE35
-_SM_C1 = 0x9E3779B9
-_SM_C2 = 0x7FEB352D
-_SM_C3 = 0x846CA68B
+from repro.core import hashing
 
 DEFAULT_BLOCK = 1024
-
-
-def _mm3(x):
-    x = x ^ (x >> 16)
-    x = x * jnp.uint32(_M3_C1)
-    x = x ^ (x >> 13)
-    x = x * jnp.uint32(_M3_C2)
-    return x ^ (x >> 16)
-
-
-def _sm32(x):
-    x = x + jnp.uint32(_SM_C1)
-    x = x ^ (x >> 16)
-    x = x * jnp.uint32(_SM_C2)
-    x = x ^ (x >> 15)
-    x = x * jnp.uint32(_SM_C3)
-    return x ^ (x >> 16)
 
 
 def _fingerprint_kernel(hi_ref, lo_ref, fp_ref, i1_ref, i2_ref, *,
                         fp_bits: int, n_buckets: int):
     hi = hi_ref[...]
     lo = lo_ref[...]
-    # fingerprint in [1, 2^f - 1]
-    h = _mm3(lo ^ _mm3(hi ^ jnp.uint32(0xDEADBEEF)))
-    fp = h & jnp.uint32((1 << fp_bits) - 1)
-    fp = jnp.where(fp == 0, jnp.uint32(1), fp)
-    # home bucket
-    i1 = (_sm32(lo) ^ _mm3(hi + jnp.uint32(0x51ED270B))) % jnp.uint32(n_buckets)
-    # alternate bucket: additive-complement involution (any n_buckets)
-    hfp = _sm32(fp) % jnp.uint32(n_buckets)
-    i2 = (hfp + jnp.uint32(n_buckets) - i1) % jnp.uint32(n_buckets)
+    # One hash spec: these are the same jnp mixers core.filter uses.
+    fp = hashing.fingerprint(hi, lo, fp_bits)
+    i1 = hashing.index_hash(hi, lo, n_buckets)
+    i2 = hashing.alt_index(i1, fp, n_buckets)
     fp_ref[...] = fp
     i1_ref[...] = i1
     i2_ref[...] = i2

@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: fused hash + optimistic single-round bulk insert.
+
+The device-side analogue of ``core.filter.parallel_insert_once`` — one
+fully-vectorized placement round (home bucket, then alternate bucket) with
+**no eviction chains**: the ~95% uncontended mass of a batch lands in one
+kernel pass; the contended residue falls back to the lax.scan eviction path
+(see ``core.filter_ops.FilterOps.insert``).
+
+Schedule:
+  * the table (the OCF's pow2 buffer) is block-resident in VMEM and aliased
+    input→output, so grid steps accumulate placements — TPU grids execute
+    sequentially, which makes block b's inserts visible to block b+1;
+  * the ACTIVE bucket count is a ``(1, 1)`` SMEM scalar (dynamic-capacity
+    filter: resizes change no shapes);
+  * keys are tiled ``(BLOCK,)``; intra-block conflicts are resolved with a
+    sort-free rank (a [BLOCK, BLOCK] broadcast-compare on the VPU — no
+    device sort needed, unlike the host path's stable argsort; both compute
+    the identical "number of earlier lanes targeting my bucket" rank, so a
+    single-block batch reproduces ``parallel_insert_once`` table-for-table);
+  * each fitting lane writes one empty slot of its bucket: rank-th empty
+    slot, so distinct lanes of a bucket never collide.
+
+Hash math is imported from ``repro.core.hashing`` — one spec for kernels,
+host data plane, and the numpy oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import hashing
+
+DEFAULT_BLOCK = 1024
+
+
+def _place_round(table, target, active, fp):
+    """One placement attempt for every active lane into ``target`` buckets.
+
+    Returns (table, placed).  Same math as the host optimistic round, with
+    the stable-argsort rank replaced by a broadcast-compare count (identical
+    result: rank = #earlier active lanes targeting the same bucket).
+    """
+    buf, _bucket_size = table.shape
+    n = target.shape[0]
+    li = jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)   # lane i (rows)
+    lj = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)   # lane j (cols)
+    same = (target[:, None] == target[None, :]) & active[None, :] & (lj < li)
+    rank = jnp.sum(same, axis=1).astype(jnp.int32)
+    tgt_c = jnp.clip(target, 0, buf - 1)
+    free = jnp.sum(table == 0, axis=1).astype(jnp.int32)  # empties per bucket
+    fits = active & (rank < free[tgt_c])
+    row = table[tgt_c]                                    # [n, bucket_size]
+    empty_pos = jnp.cumsum((row == 0).astype(jnp.int32), axis=1) - 1
+    is_dest = (row == 0) & (empty_pos == rank[:, None])
+    slot = jnp.argmax(is_dest, axis=1)
+    upd_i = jnp.where(fits, target, buf)                  # OOB -> dropped
+    table = table.at[upd_i, slot].set(fp, mode="drop")
+    return table, fits
+
+
+def _insert_kernel(n_ref, table_in_ref, hi_ref, lo_ref, valid_ref, table_ref,
+                   ok_ref, *, fp_bits: int):
+    del table_in_ref  # aliased to table_ref (the output) — read/write there
+    n_buckets = n_ref[0, 0]
+    table = table_ref[...]
+    hi = hi_ref[...]
+    lo = lo_ref[...]
+    valid = valid_ref[...]
+    fp = hashing.fingerprint(hi, lo, fp_bits)
+    i1 = hashing.index_hash_dyn(hi, lo, n_buckets).astype(jnp.int32)
+    i2 = hashing.alt_index_dyn(i1, fp, n_buckets).astype(jnp.int32)
+    table, ok1 = _place_round(table, i1, valid, fp)
+    table, ok2 = _place_round(table, i2, valid & ~ok1, fp)
+    table_ref[...] = table
+    ok_ref[...] = ok1 | ok2
+
+
+@functools.partial(jax.jit, static_argnames=("fp_bits", "block", "interpret"))
+def insert_once(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
+                fp_bits: int, n_buckets=None, valid=None,
+                block: int = DEFAULT_BLOCK, interpret: bool = True
+                ) -> tuple[jax.Array, jax.Array]:
+    """One optimistic insert round -> (new_table, placed bool[N]).
+
+    N must be a block multiple (ops.py pads).  ``n_buckets`` is the ACTIVE
+    bucket count (may be < ``table.shape[0]`` for the OCF's pow2 buffer).
+    Lanes with ``valid=False`` never touch the table.
+    """
+    n = hi.shape[0]
+    block = min(block, n)
+    assert n % block == 0, f"{n=} not a multiple of {block=}"
+    buffer_buckets, bucket_size = table.shape
+    if n_buckets is None:
+        n_buckets = buffer_buckets
+    if valid is None:
+        valid = jnp.ones((n,), bool)
+    n_arr = jnp.asarray(n_buckets, jnp.int32).reshape(1, 1)
+    grid = (n // block,)
+    smem_spec = pl.BlockSpec((1, 1), lambda i: (0, 0),
+                             memory_space=pltpu.SMEM)
+    key_spec = pl.BlockSpec((block,), lambda i: (i,))
+    table_spec = pl.BlockSpec((buffer_buckets, bucket_size), lambda i: (0, 0))
+    new_table, ok = pl.pallas_call(
+        functools.partial(_insert_kernel, fp_bits=fp_bits),
+        grid=grid,
+        in_specs=[smem_spec, table_spec, key_spec, key_spec, key_spec],
+        out_specs=[table_spec, pl.BlockSpec((block,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct(table.shape, table.dtype),
+                   jax.ShapeDtypeStruct((n,), jnp.bool_)],
+        input_output_aliases={1: 0},   # table updates in place across steps
+        interpret=interpret,
+    )(n_arr, table, hi.astype(jnp.uint32), lo.astype(jnp.uint32), valid)
+    return new_table, ok

@@ -4,6 +4,12 @@ Backend dispatch: Pallas-TPU lowers only on TPU; on the CPU host (this
 container, tests) kernels run in ``interpret=True`` mode and large-shape
 callers fall back to the pure-jnp oracle (``ref.py``), which is what the
 dry-run compiles.  ``use_pallas='auto'|'always'|'never'`` controls this.
+
+The single dispatch predicate lives in ``_use_kernel`` — the seed had an
+operator-precedence bug (``A or (B and C) or D`` instead of
+``A or (B and (C or D))``) that silently demoted ``use_pallas='always'`` to
+the ref path whenever the VMEM estimate was large; 'always' now ALWAYS takes
+the kernel (regression-tested in tests/test_filter_ops.py).
 """
 from __future__ import annotations
 
@@ -13,11 +19,35 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.fingerprint import fingerprint_hash
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.insert import insert_once
 from repro.kernels.probe import probe
+
+# Whole-table VMEM residency budget for the filter kernels (the probe/insert
+# BlockSpecs pin the full table per program; larger filters shard first).
+VMEM_TABLE_BUDGET = 12 * 2**20
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def _use_kernel(use_pallas: str, *, table_bytes: int, n_keys: int) -> bool:
+    """True when the Pallas kernel should run (vs the pure-jnp ref path).
+
+    'always' -> kernel, unconditionally (interpret mode off-TPU).
+    'never'  -> ref path, unconditionally.
+    'auto'   -> kernel iff the table fits the VMEM budget AND, off-TPU, the
+                batch is small enough for interpret mode to be sensible.
+    """
+    if use_pallas == "never":
+        return False
+    if use_pallas == "always":
+        return True
+    if table_bytes > VMEM_TABLE_BUDGET:
+        return False
+    if not _on_tpu() and n_keys > 65536:
+        return False
+    return True
 
 
 def _pad_to(x: jax.Array, mult: int):
@@ -31,7 +61,8 @@ def _pad_to(x: jax.Array, mult: int):
 def hash_keys(hi: jax.Array, lo: jax.Array, *, fp_bits: int, n_buckets: int,
               use_pallas: str = "auto"):
     """(fp, i1, i2) via the fingerprint kernel (padded to the block size)."""
-    if use_pallas == "never":
+    if hi.shape[0] == 0 or not _use_kernel(use_pallas, table_bytes=0,
+                                           n_keys=hi.shape[0]):
         return ref.fingerprint_ref(hi, lo, fp_bits=fp_bits, n_buckets=n_buckets)
     block = 1024 if hi.shape[0] >= 1024 else hi.shape[0]
     hi_p, n = _pad_to(hi, block)
@@ -43,19 +74,52 @@ def hash_keys(hi: jax.Array, lo: jax.Array, *, fp_bits: int, n_buckets: int,
 
 
 def filter_lookup(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
-                  fp_bits: int, use_pallas: str = "auto") -> jax.Array:
-    """Bulk membership via the fused probe kernel."""
-    vmem_bytes = table.size * 4
-    if use_pallas == "never" or (use_pallas == "auto" and
-                                 (not _on_tpu() and hi.shape[0] > 65536)
-                                 or vmem_bytes > 12 * 2**20):
-        return ref.probe_ref(table, hi, lo, fp_bits=fp_bits)
+                  fp_bits: int, n_buckets=None,
+                  use_pallas: str = "auto") -> jax.Array:
+    """Bulk membership via the fused probe kernel.
+
+    ``n_buckets``: ACTIVE bucket count when ``table`` is a pow2 buffer
+    larger than the live filter (the OCF state); defaults to the full table.
+    """
+    if hi.shape[0] == 0:
+        return jnp.zeros((0,), jnp.bool_)
+    if not _use_kernel(use_pallas, table_bytes=table.size * 4,
+                       n_keys=hi.shape[0]):
+        return ref.probe_ref(table, hi, lo, fp_bits=fp_bits,
+                             n_buckets=n_buckets)
     block = 1024 if hi.shape[0] >= 1024 else hi.shape[0]
     hi_p, n = _pad_to(hi, block)
     lo_p, _ = _pad_to(lo, block)
-    hit = probe(table, hi_p, lo_p, fp_bits=fp_bits, block=block,
-                interpret=not _on_tpu())
+    hit = probe(table, hi_p, lo_p, fp_bits=fp_bits, n_buckets=n_buckets,
+                block=block, interpret=not _on_tpu())
     return hit[:n]
+
+
+def filter_insert(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
+                  fp_bits: int, n_buckets=None, valid=None,
+                  use_pallas: str = "auto") -> tuple[jax.Array, jax.Array]:
+    """Optimistic single-round bulk insert -> (new_table, placed bool[N]).
+
+    The device-side fast path for ~95% of a batch; callers sweep the
+    ``~placed`` residue through the eviction-chain scan (see
+    ``core.filter_ops.FilterOps.insert``).
+    """
+    if hi.shape[0] == 0:
+        return table, jnp.zeros((0,), jnp.bool_)
+    if valid is None:
+        valid = jnp.ones(hi.shape, bool)
+    if not _use_kernel(use_pallas, table_bytes=table.size * 4,
+                       n_keys=hi.shape[0]):
+        return ref.insert_once_ref(table, hi, lo, fp_bits=fp_bits,
+                                   n_buckets=n_buckets, valid=valid)
+    block = 1024 if hi.shape[0] >= 1024 else hi.shape[0]
+    hi_p, n = _pad_to(hi, block)
+    lo_p, _ = _pad_to(lo, block)
+    valid_p, _ = _pad_to(valid, block)   # pads False: never touches the table
+    new_table, ok = insert_once(table, hi_p, lo_p, fp_bits=fp_bits,
+                                n_buckets=n_buckets, valid=valid_p,
+                                block=block, interpret=not _on_tpu())
+    return new_table, ok[:n]
 
 
 def attention(q, k, v, *, causal: bool = True, window: int | None = None,
@@ -85,5 +149,6 @@ def attention(q, k, v, *, causal: bool = True, window: int | None = None,
                                    key_positions=key_positions)
 
 
-__all__ = ["hash_keys", "filter_lookup", "attention", "fingerprint_hash",
-           "probe", "flash_attention"]
+__all__ = ["hash_keys", "filter_lookup", "filter_insert", "attention",
+           "fingerprint_hash", "probe", "insert_once", "flash_attention",
+           "VMEM_TABLE_BUDGET"]

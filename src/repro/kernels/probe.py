@@ -2,14 +2,20 @@
 hot path of the OCF).
 
 Layout strategy (TPU adaptation of the paper's pointer-chasing lookup):
-  * the bucket table ``uint32[n_buckets, bucket_size]`` is block-resident in
-    VMEM — the BlockSpec index_map pins the whole table for every program
+  * the bucket table ``uint32[buffer_buckets, bucket_size]`` is block-resident
+    in VMEM — the BlockSpec index_map pins the whole table for every program
     (capacity ≤ ~2M slots ⇒ ≤ 8 MB, inside the ~16 MB VMEM budget; larger
     filters shard first — see core.distributed);
+  * the ACTIVE bucket count rides along as a ``(1, 1)`` SMEM scalar, so the
+    kernel probes the same dynamic-capacity state the OCF control plane
+    resizes — one compiled kernel per buffer size, never per active size;
   * keys are tiled ``(BLOCK,)`` over a 1-D grid, hashing is fused so a key is
     read once from HBM and never revisited;
   * both candidate buckets are gathered from VMEM and compared per lane —
     2·bucket_size uint32 compares per key on the VPU, no MXU involvement.
+
+The hash math is imported from ``repro.core.hashing`` — one spec shared by
+the host data plane, the numpy oracle, and every kernel.
 """
 from __future__ import annotations
 
@@ -18,22 +24,20 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.fingerprint import _mm3, _sm32
+from repro.core import hashing
 
 DEFAULT_BLOCK = 1024
 
 
-def _probe_kernel(table_ref, hi_ref, lo_ref, hit_ref, *, fp_bits: int):
-    n_buckets = table_ref.shape[0]
+def _probe_kernel(n_ref, table_ref, hi_ref, lo_ref, hit_ref, *, fp_bits: int):
+    n_buckets = n_ref[0, 0]
     hi = hi_ref[...]
     lo = lo_ref[...]
-    h = _mm3(lo ^ _mm3(hi ^ jnp.uint32(0xDEADBEEF)))
-    fp = h & jnp.uint32((1 << fp_bits) - 1)
-    fp = jnp.where(fp == 0, jnp.uint32(1), fp)
-    i1 = (_sm32(lo) ^ _mm3(hi + jnp.uint32(0x51ED270B))) % jnp.uint32(n_buckets)
-    hfp = _sm32(fp) % jnp.uint32(n_buckets)
-    i2 = (hfp + jnp.uint32(n_buckets) - i1) % jnp.uint32(n_buckets)
+    fp = hashing.fingerprint(hi, lo, fp_bits)
+    i1 = hashing.index_hash_dyn(hi, lo, n_buckets)
+    i2 = hashing.alt_index_dyn(i1, fp, n_buckets)
     b1 = table_ref[i1.astype(jnp.int32), :]   # [BLOCK, bucket_size] VMEM gather
     b2 = table_ref[i2.astype(jnp.int32), :]
     hit = jnp.any(b1 == fp[:, None], axis=-1) | jnp.any(b2 == fp[:, None], axis=-1)
@@ -42,20 +46,31 @@ def _probe_kernel(table_ref, hi_ref, lo_ref, hit_ref, *, fp_bits: int):
 
 @functools.partial(jax.jit, static_argnames=("fp_bits", "block", "interpret"))
 def probe(table: jax.Array, hi: jax.Array, lo: jax.Array, *, fp_bits: int,
-          block: int = DEFAULT_BLOCK, interpret: bool = True) -> jax.Array:
-    """Bulk membership test -> bool[N].  N must be a block multiple."""
+          n_buckets=None, block: int = DEFAULT_BLOCK,
+          interpret: bool = True) -> jax.Array:
+    """Bulk membership test -> bool[N].  N must be a block multiple.
+
+    ``n_buckets``: ACTIVE bucket count (int or traced scalar); defaults to
+    the full table, i.e. buffer == active.  May be less than
+    ``table.shape[0]`` when the table is the OCF's preallocated pow2 buffer.
+    """
     n = hi.shape[0]
     block = min(block, n)
     assert n % block == 0, f"{n=} not a multiple of {block=}"
-    n_buckets, bucket_size = table.shape
+    buffer_buckets, bucket_size = table.shape
+    if n_buckets is None:
+        n_buckets = buffer_buckets
+    n_arr = jnp.asarray(n_buckets, jnp.int32).reshape(1, 1)
     grid = (n // block,)
+    smem_spec = pl.BlockSpec((1, 1), lambda i: (0, 0),
+                             memory_space=pltpu.SMEM)
     key_spec = pl.BlockSpec((block,), lambda i: (i,))
-    table_spec = pl.BlockSpec((n_buckets, bucket_size), lambda i: (0, 0))
+    table_spec = pl.BlockSpec((buffer_buckets, bucket_size), lambda i: (0, 0))
     return pl.pallas_call(
         functools.partial(_probe_kernel, fp_bits=fp_bits),
         grid=grid,
-        in_specs=[table_spec, key_spec, key_spec],
+        in_specs=[smem_spec, table_spec, key_spec, key_spec],
         out_specs=pl.BlockSpec((block,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((n,), jnp.bool_),
         interpret=interpret,
-    )(table, hi.astype(jnp.uint32), lo.astype(jnp.uint32))
+    )(n_arr, table, hi.astype(jnp.uint32), lo.astype(jnp.uint32))

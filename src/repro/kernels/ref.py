@@ -8,6 +8,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import filter as jfilter
 from repro.core import hashing
 
 
@@ -26,14 +27,39 @@ def fingerprint_ref(hi: jax.Array, lo: jax.Array, *, fp_bits: int,
 # ------------------------------------------------------------------ probe --
 
 
-def probe_ref(table: jax.Array, hi: jax.Array, lo: jax.Array, *, fp_bits: int
-              ) -> jax.Array:
-    """Bulk membership: bool[N]."""
-    n_buckets = table.shape[0]
-    fp, i1, i2 = fingerprint_ref(hi, lo, fp_bits=fp_bits, n_buckets=n_buckets)
+def probe_ref(table: jax.Array, hi: jax.Array, lo: jax.Array, *, fp_bits: int,
+              n_buckets=None) -> jax.Array:
+    """Bulk membership: bool[N].
+
+    ``n_buckets``: ACTIVE bucket count (int or traced scalar); defaults to
+    the full table (buffer == active)."""
+    if n_buckets is None:
+        n_buckets = table.shape[0]
+    fp = hashing.fingerprint(hi, lo, fp_bits)
+    i1 = hashing.index_hash_dyn(hi, lo, n_buckets)
+    i2 = hashing.alt_index_dyn(i1, fp, n_buckets)
     hit1 = jnp.any(table[i1] == fp[:, None], axis=-1)
     hit2 = jnp.any(table[i2] == fp[:, None], axis=-1)
     return hit1 | hit2
+
+
+# ------------------------------------------------------------------ insert --
+
+
+def insert_once_ref(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
+                    fp_bits: int, n_buckets=None, valid=None
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Optimistic single-round insert on a raw table -> (table, placed).
+
+    Delegates to ``core.filter.parallel_insert_once`` so the oracle and the
+    host fast path are literally the same code."""
+    if n_buckets is None:
+        n_buckets = table.shape[0]
+    state = jfilter.FilterState(table, jnp.zeros((), jnp.int32),
+                                jnp.asarray(n_buckets, jnp.int32))
+    state, placed = jfilter.parallel_insert_once(state, hi, lo,
+                                                 fp_bits=fp_bits, valid=valid)
+    return state.table, placed
 
 
 # -------------------------------------------------------- flash attention --

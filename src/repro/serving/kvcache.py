@@ -50,13 +50,22 @@ class PrefixStats:
 
 
 class PrefixCacheIndex:
-    """OCF-backed membership index over cached KV prefix blocks."""
+    """OCF-backed membership index over cached KV prefix blocks.
+
+    ``backend`` (optional) overrides the filter data-plane backend of the
+    underlying OCF ("jnp" | "pallas" | "auto") without callers having to
+    build an ``OcfConfig`` — the serving layer inherits the same
+    ``FilterOps`` dispatch as every other consumer.
+    """
 
     def __init__(self, config: Optional[OcfConfig] = None, block: int = 64,
-                 max_blocks: int = 1 << 16):
+                 max_blocks: int = 1 << 16, backend: Optional[str] = None):
         self.block = block
         self.max_blocks = max_blocks
-        self.ocf = OCF(config or OcfConfig(capacity=4096, mode="EOF"))
+        config = config or OcfConfig(capacity=4096, mode="EOF")
+        if backend is not None:
+            config = dataclasses.replace(config, backend=backend)
+        self.ocf = OCF(config)
         self.stats = PrefixStats()
         self._lru: list[int] = []   # admitted block keys, oldest first
 

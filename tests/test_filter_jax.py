@@ -8,6 +8,8 @@ from repro.core import filter as jf
 
 from conftest import random_keys
 
+pytestmark = pytest.mark.tier1
+
 
 def _pair(keys):
     hi, lo = hashing.key_to_u32_pair_np(keys)

@@ -7,6 +7,8 @@ from repro.core import hashing
 
 from conftest import random_keys
 
+pytestmark = pytest.mark.tier1
+
 
 def test_numpy_jax_agreement(rng):
     keys = random_keys(rng, 4096)

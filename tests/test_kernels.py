@@ -10,9 +10,12 @@ from repro.core import filter as jf
 from repro.kernels import ref
 from repro.kernels.fingerprint import fingerprint_hash
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.insert import insert_once
 from repro.kernels.probe import probe
 
 from conftest import random_keys
+
+pytestmark = pytest.mark.tier1
 
 
 def _pair(keys):
@@ -46,6 +49,61 @@ def test_probe_kernel_sweep(rng, n_buckets, bucket_size):
     phi, plo = _pair(probes)
     got = probe(st.table, phi, plo, fp_bits=16, block=1024, interpret=True)
     want = ref.probe_ref(st.table, phi, plo, fp_bits=16)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("n_buckets,bucket_size,n", [(512, 4, 1024),
+                                                     (777, 4, 512),
+                                                     (1024, 8, 1024)])
+def test_insert_kernel_matches_ref_single_block(rng, n_buckets, bucket_size,
+                                                n):
+    """One kernel block == the jnp optimistic round, table-for-table."""
+    keys = random_keys(rng, n)
+    hi, lo = _pair(keys)
+    table = jf.make_state(n_buckets, bucket_size).table
+    t_k, ok_k = insert_once(table, hi, lo, fp_bits=16, block=n,
+                            interpret=True)
+    t_r, ok_r = ref.insert_once_ref(table, hi, lo, fp_bits=16)
+    np.testing.assert_array_equal(np.asarray(t_k), np.asarray(t_r))
+    np.testing.assert_array_equal(np.asarray(ok_k), np.asarray(ok_r))
+
+
+def test_insert_kernel_multi_block_accumulates(rng):
+    """Grid steps share the aliased table: placements accumulate, never
+    collide, and every placed key is findable by the probe kernel."""
+    keys = random_keys(rng, 4096)
+    hi, lo = _pair(keys)
+    table = jf.make_state(2048, 4).table
+    t, ok = insert_once(table, hi, lo, fp_bits=16, block=512, interpret=True)
+    placed = int(np.asarray(ok).sum())
+    assert int((np.asarray(t) != 0).sum()) == placed
+    hits = probe(t, hi, lo, fp_bits=16, block=1024, interpret=True)
+    assert np.asarray(hits)[np.asarray(ok)].all()
+
+
+def test_insert_kernel_respects_active_region(rng):
+    """With active < buffer, no fingerprint lands past the active buckets."""
+    keys = random_keys(rng, 1024)
+    hi, lo = _pair(keys)
+    st = jf.make_state(300, 4, buffer_buckets=512)
+    t, ok = insert_once(st.table, hi, lo, fp_bits=16,
+                        n_buckets=st.n_buckets, block=512, interpret=True)
+    assert not np.asarray(t)[300:].any()
+    got = probe(t, hi, lo, fp_bits=16, n_buckets=st.n_buckets, block=1024,
+                interpret=True)
+    assert np.asarray(got)[np.asarray(ok)].all()
+
+
+def test_probe_kernel_buffered_matches_ref(rng):
+    """Probe with an SMEM active count over a larger buffer == ref path."""
+    keys = random_keys(rng, 2048)
+    hi, lo = _pair(keys)
+    st = jf.make_state(400, 4, buffer_buckets=1024)
+    st, _ = jf.bulk_insert(st, hi[:1000], lo[:1000], fp_bits=16)
+    got = probe(st.table, hi, lo, fp_bits=16, n_buckets=st.n_buckets,
+                block=1024, interpret=True)
+    want = ref.probe_ref(st.table, hi, lo, fp_bits=16,
+                         n_buckets=st.n_buckets)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 

@@ -8,6 +8,8 @@ from repro.core.metrics import (measure_false_negatives,
 
 from conftest import random_keys
 
+pytestmark = pytest.mark.tier1
+
 
 @pytest.mark.parametrize("mode", ["PRE", "EOF"])
 def test_burst_insert_grows_and_keeps_all_keys(rng, mode):

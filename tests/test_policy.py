@@ -3,6 +3,8 @@ import pytest
 
 from repro.core.policy import EofPolicy, PrePolicy, O_SAFE
 
+pytestmark = pytest.mark.tier1
+
 
 def test_pre_grows_by_doubling():
     p = PrePolicy(o_max=0.85, o_min=0.25, c_min=1024)

@@ -1,6 +1,13 @@
-"""Hypothesis property tests on the system's core invariants."""
+"""Hypothesis property tests on the system's core invariants.
+
+``hypothesis`` is an optional dev dependency: when absent the module skips
+cleanly instead of killing collection for the whole suite.
+"""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import OCF, OcfConfig, PyCuckooFilter, hashing
 

@@ -6,6 +6,8 @@ from repro.core import PyCuckooFilter
 
 from conftest import random_keys
 
+pytestmark = pytest.mark.tier1
+
 
 def test_insert_lookup_no_false_negatives(rng):
     f = PyCuckooFilter(n_buckets=2048, bucket_size=4, fp_bits=16)

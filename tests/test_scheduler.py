@@ -10,6 +10,8 @@ from repro.configs import get_smoke_config
 from repro.models import Transformer
 from repro.serving.scheduler import ContinuousBatcher, Request
 
+pytestmark = pytest.mark.tier1
+
 
 @pytest.fixture(scope="module")
 def small_model():

@@ -4,6 +4,8 @@ import pytest
 
 from repro.serving.kvcache import PrefixCacheIndex, block_hashes
 
+pytestmark = pytest.mark.tier1
+
 
 def test_block_hashes_prefix_sensitivity(rng):
     t1 = rng.randint(0, 1000, 256).astype(np.int32)
