@@ -1,11 +1,15 @@
-"""Filter data-plane microbenchmark (ISSUE 1 satellite).
+"""Filter data-plane microbenchmark (ISSUE 1 satellite; extended in PR 3).
 
-Reports lookup / insert / delete keys-per-second through ``FilterOps`` for
-each backend, plus the keystore comparison that motivated the OCF rework:
-the seed kept a Python ``dict`` and looped ``for k in keys.tolist()`` per
-insert and a list-comprehension membership check per delete; the vectorized
-``VectorKeystore`` replaces both with numpy batch ops.  Results land in
-``BENCH_filter.json`` so later PRs have a perf trajectory.
+Reports lookup / insert / insert-residue / delete keys-per-second through
+``FilterOps`` for each backend, plus the keystore comparison that motivated
+the OCF rework: the seed kept a Python ``dict`` and looped ``for k in
+keys.tolist()`` per insert and a list-comprehension membership check per
+delete; the vectorized ``VectorKeystore`` replaces both with numpy batch
+ops.  The insert-residue row times a *contended* insert (preloaded table
+pushed to ~0.9 load) so the eviction machinery is actually on the clock —
+on the pallas backend that is the in-kernel bounded eviction rounds, on jnp
+the lax.scan chain sweep.  Results land in ``BENCH_filter.json`` so later
+PRs have a perf trajectory.
 
 Run directly (``PYTHONPATH=src python benchmarks/filter_bench.py``) or via
 ``benchmarks/run.py``.
@@ -83,6 +87,24 @@ def backend_rows(rng, *, backends=("jnp", "pallas"), n_buckets=1 << 14,
     return rows, results
 
 
+def residue_rows(rng, *, backends=("jnp", "pallas"), n_buckets=2048,
+                 preload=6000, n=1 << 11):
+    """Contended-insert rows: preloaded to ~0.73, the timed batch lands at
+    ~0.98 load, so a large residue falls through to the eviction machinery
+    (in-kernel rounds on pallas, the lax.scan sweep on jnp)."""
+    rows, results = [], {}
+    pre, phi, plo = _pair(rng, preload)
+    _keys, hi, lo = _pair(rng, n)
+    for backend in backends:
+        fops = FilterOps(fp_bits=16, backend=backend)
+        loaded, ok = fops.insert(jf.make_state(n_buckets, 4), phi, plo)
+        t = _time(lambda: fops.insert(loaded, hi, lo))
+        rows.append((f"filter_insert_residue_{backend}", t / n * 1e6,
+                     int(n / t)))
+        results[f"insert_residue_{backend}_keys_per_s"] = int(n / t)
+    return rows, results
+
+
 def keystore_rows(rng, *, n=KEYSTORE_BATCH):
     """Vectorized keystore vs the seed per-key dict loop on one big batch."""
     keys = rng.randint(0, 2 ** 63, size=n, dtype=np.int64).astype(np.uint64)
@@ -129,7 +151,7 @@ def ocf_insert_rows(rng, *, n=KEYSTORE_BATCH):
 def run(json_path: str | None = JSON_PATH):
     rng = np.random.RandomState(0)
     rows, results = [], {"backend_default": jax.default_backend()}
-    for fn in (backend_rows, keystore_rows, ocf_insert_rows):
+    for fn in (backend_rows, residue_rows, keystore_rows, ocf_insert_rows):
         r, res = fn(rng)
         rows += r
         results.update(res)

@@ -1,0 +1,22 @@
+#!/usr/bin/env bash
+# Tier-1 verification: the fast core test subset plus a smoke run of the
+# filter data-plane benchmark.  This is the check every PR must keep green
+# (see ROADMAP.md "Tier-1 verify" and README.md "Verifying").
+#
+#   bash scripts/verify.sh            # from the repo root
+#
+# The benchmark smoke writes BENCH_filter.json at the repo root — per-backend
+# lookup/insert/insert-residue/delete keys-per-second (the perf trajectory
+# tracked across PRs).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 test suite =="
+python -m pytest -m tier1 -x -q
+
+echo "== filter_bench smoke =="
+python benchmarks/filter_bench.py
+
+echo "verify OK"

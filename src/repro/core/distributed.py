@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import filter as jfilter
 from repro.core import hashing
 from repro.core.filter_ops import FilterOps
 
@@ -120,6 +121,29 @@ def local_shard_insert_host(state: ShardedFilterState, shard: int, table
                             ) -> ShardedFilterState:
     """Host-side table swap after a per-shard rebuild/insert."""
     return ShardedFilterState(tables=state.tables.at[shard].set(table))
+
+
+def local_shard_delete_host(state: ShardedFilterState, shard: int,
+                            hi: jax.Array, lo: jax.Array, *, fp_bits: int,
+                            backend: str = "jnp", n_buckets=None
+                            ) -> tuple[ShardedFilterState, jax.Array]:
+    """Verified delete on one shard, through the FilterOps data plane.
+
+    The shard-ring analogue of tombstoning a key on its owner node: the
+    controller (which already routed the key with ``owner_shard`` and
+    verified it against the shard's keystore) deletes from the owner's local
+    table and swaps it back in.  ``backend="pallas"`` runs the fused delete
+    kernel on the shard table — the same dispatch as the single-node path.
+    Returns (new_state, deleted bool[N]).
+    """
+    table = state.tables[shard]
+    if n_buckets is None:
+        n_buckets = table.shape[0]
+    st = jfilter.FilterState(table, jnp.zeros((), jnp.int32),
+                             jnp.asarray(n_buckets, jnp.int32))
+    st, ok = FilterOps(fp_bits=fp_bits, backend=backend).delete(st, hi, lo)
+    return ShardedFilterState(
+        tables=state.tables.at[shard].set(st.table)), ok
 
 
 @functools.partial(jax.jit, static_argnames=("fp_bits", "backend"))

@@ -9,12 +9,14 @@ One ``backend`` flag flips the whole stack:
                    gather/scatter lookups, optimistic parallel insert round
                    with a mask-driven lax.scan eviction fallback.
   * ``"pallas"`` — the fused TPU kernels (``kernels.probe`` for lookups,
-                   ``kernels.insert`` for the optimistic insert round): hash
-                   and probe fused so each key is read from HBM once, table
-                   VMEM-resident, active capacity as an SMEM scalar.  The
-                   eviction-chain fallback and deletes still run on the
-                   lax.scan path — device-side eviction chains are an open
-                   kernel gap (ROADMAP "Open items").
+                   ``kernels.insert`` for inserts, ``kernels.delete`` for
+                   deletes): hash and probe fused so each key is read from
+                   HBM once, table VMEM-resident, active capacity as an SMEM
+                   scalar.  Since PR 3 the WHOLE insert stays on-device —
+                   the contended residue is resolved by bounded eviction
+                   rounds inside the insert kernel (``evict_rounds``), and
+                   deletes run through the fused first-match-slot kernel;
+                   nothing on this backend touches the lax.scan path.
   * ``"auto"``   — pallas on TPU when the table fits the kernel VMEM budget,
                    jnp otherwise (CPU hosts interpret Pallas, which is only
                    worth it for validation, not throughput).
@@ -43,11 +45,22 @@ Backend = Literal["jnp", "pallas", "auto"]
 
 @dataclasses.dataclass(frozen=True)
 class FilterOps:
-    """Backend-dispatched lookup / insert / delete / rebuild entry points."""
+    """Backend-dispatched lookup / insert / delete / rebuild entry points.
+
+    ``max_disp`` bounds the sequential eviction chain of the jnp backend;
+    ``evict_rounds`` bounds the device-side eviction rounds of the pallas
+    insert kernel (its while_loop exits early, so the bound only costs VMEM
+    for the per-lane rollback history).  Both exhaust the same way: the
+    overflowing key reports False with the table rolled back, and the OCF
+    control plane grows + rebuilds from the keystore.
+    """
 
     fp_bits: int = 16
     max_disp: int = 500
     backend: Backend = "auto"
+    # Literal (not kops.DEFAULT_EVICT_ROUNDS): entry points that import the
+    # kernel package first would hit it partially initialized here.
+    evict_rounds: int = 32
 
     def __post_init__(self):
         assert self.backend in ("jnp", "pallas", "auto"), (
@@ -57,10 +70,17 @@ class FilterOps:
     # -------------------------------------------------------- dispatch --
 
     def resolve(self, table: jax.Array) -> str:
-        """Concrete backend for this table ('auto' -> hardware decision)."""
+        """Concrete backend for this table ('auto' -> hardware decision).
+
+        Budgets against the insert kernel's footprint — the most demanding
+        of the three (aliased table + dirty bitmap + eviction history) — so
+        one FilterOps never splits a workload across backends mid-stream.
+        """
         if self.backend != "auto":
             return self.backend
-        if kops._on_tpu() and table.size * 4 <= kops.VMEM_TABLE_BUDGET:
+        if kops._on_tpu() and kops.kernel_vmem_bytes(
+                "insert", table_bytes=table.size * 4, block=1024,
+                evict_rounds=self.evict_rounds) <= kops.VMEM_TABLE_BUDGET:
             return "pallas"
         return "jnp"
 
@@ -79,24 +99,22 @@ class FilterOps:
     def insert(self, state: jfilter.FilterState, hi: jax.Array,
                lo: jax.Array, valid: Optional[jax.Array] = None
                ) -> tuple[jfilter.FilterState, jax.Array]:
-        """Hybrid insert -> (state, ok[N]).
+        """Bulk insert -> (state, ok[N]).
 
-        Optimistic single round on the chosen backend, then the residue mask
-        drives the eviction-chain scan on device — no host sync in between.
+        pallas: ONE fused kernel pass — optimistic rounds plus bounded
+        device-side eviction rounds for the contended residue; no lax.scan
+        fallback, no host sync.  jnp: the hybrid optimistic-round +
+        eviction-chain-scan path.  Either way a key that exhausts its
+        budget reports False with the table rolled back (never corrupted).
         """
         if self.resolve(state.table) == "pallas":
-            if valid is None:
-                valid = jnp.ones(hi.shape, bool)
-            table, placed = kops.filter_insert(
+            table, ok = kops.filter_insert(
                 state.table, hi, lo, fp_bits=self.fp_bits,
-                n_buckets=state.n_buckets, valid=valid, use_pallas="always")
-            mid = jfilter.FilterState(
-                table, state.count + jnp.sum(placed, dtype=jnp.int32),
-                state.n_buckets)
-            state2, ok2 = jfilter.bulk_insert(
-                mid, hi, lo, fp_bits=self.fp_bits, max_disp=self.max_disp,
-                valid=valid & ~placed)
-            return state2, placed | ok2
+                n_buckets=state.n_buckets, valid=valid,
+                evict_rounds=self.evict_rounds, use_pallas="always")
+            return jfilter.FilterState(
+                table, state.count + jnp.sum(ok, dtype=jnp.int32),
+                state.n_buckets), ok
         return jfilter.bulk_insert_hybrid(state, hi, lo, fp_bits=self.fp_bits,
                                           max_disp=self.max_disp, valid=valid)
 
@@ -105,8 +123,17 @@ class FilterOps:
                ) -> tuple[jfilter.FilterState, jax.Array]:
         """Verified bulk delete -> (state, ok[N]).
 
-        Always the lax.scan path — a fused delete kernel is an open item
-        (deletes are rare on the serving path relative to probes)."""
+        pallas: the fused first-match-slot kernel (``kernels.delete``).
+        jnp: the sequential lax.scan path.  Both rank duplicate keys so the
+        k-th duplicate clears the k-th resident copy; callers pre-verify
+        membership against the keystore (the OCF control plane does)."""
+        if self.resolve(state.table) == "pallas":
+            table, ok = kops.filter_delete(
+                state.table, hi, lo, fp_bits=self.fp_bits,
+                n_buckets=state.n_buckets, valid=valid, use_pallas="always")
+            return jfilter.FilterState(
+                table, state.count - jnp.sum(ok, dtype=jnp.int32),
+                state.n_buckets), ok
         return jfilter.bulk_delete(state, hi, lo, fp_bits=self.fp_bits,
                                    valid=valid)
 

@@ -4,8 +4,9 @@ Host-side control plane + backend-dispatched data plane:
 
   * data plane: every lookup/insert/delete/rebuild goes through
     ``repro.core.filter_ops.FilterOps`` — one dispatch layer over the
-    pure-jnp bulk ops and the fused Pallas kernels, selected by
-    ``OcfConfig.backend`` ("jnp" | "pallas" | "auto").  The table is a
+    pure-jnp bulk ops and the fused Pallas kernels (probe, insert with
+    bounded device-side eviction rounds, first-match-slot delete), selected
+    by ``OcfConfig.backend`` ("jnp" | "pallas" | "auto").  The table is a
     device-resident **dynamic active capacity inside a preallocated pow2
     buffer** — resizes change no shapes, so the jit/kernel cache stays warm
     across the whole EOF schedule; device calls are fixed-``CHUNK`` batches
@@ -46,6 +47,7 @@ class OcfConfig:
     max_displacements: int = 500
     mode: Literal["PRE", "EOF"] = "EOF"
     backend: Backend = "auto"        # filter data plane: jnp | pallas | auto
+    evict_rounds: int = 32           # pallas insert kernel's eviction budget
     o_max: float = 0.85              # Max Occupancy
     o_min: float = 0.25              # Min Occupancy
     k_min: float = 0.35              # K markers (EOF)
@@ -65,7 +67,8 @@ class OcfConfig:
     def make_filter_ops(self) -> FilterOps:
         return FilterOps(fp_bits=self.fp_bits,
                          max_disp=self.max_displacements,
-                         backend=self.backend)
+                         backend=self.backend,
+                         evict_rounds=self.evict_rounds)
 
 
 @dataclasses.dataclass

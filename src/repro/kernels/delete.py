@@ -1,0 +1,128 @@
+"""Pallas TPU kernel: fused hash + first-match-slot bulk delete.
+
+The device-side analogue of ``core.filter.bulk_delete`` — deletes are what
+distinguish a cuckoo filter from a Bloom filter, and until PR 3 they were
+the last ``FilterOps`` op stuck on the sequential ``lax.scan`` path.  One
+kernel pass hashes each key, probes the home bucket and (for lanes that
+missed there) the alternate bucket, and clears exactly one matching slot
+per successful lane.
+
+Schedule — same layout strategy as ``probe.py`` / ``insert.py``:
+  * the table (the OCF's pow2 buffer) is block-resident in VMEM and aliased
+    input→output, so grid steps accumulate clears — TPU grids execute
+    sequentially, which makes block b's deletes visible to block b+1;
+  * the ACTIVE bucket count is a ``(1, 1)`` SMEM scalar;
+  * keys are tiled ``(BLOCK,)``; duplicate keys inside a block are resolved
+    with the broadcast-compare rank used by the insert kernel, refined to
+    (bucket, fingerprint) pairs: lane i's rank counts earlier lanes
+    clearing the same fingerprint from the same bucket, and lane i claims
+    the rank-th matching slot.  That reproduces the sequential scan exactly
+    for duplicate keys — the k-th duplicate clears the k-th copy, and
+    duplicates beyond the resident multiplicity report False.
+
+Parity caveat: the kernel runs all home-bucket attempts before all
+alternate-bucket attempts, while the scan interleaves them per key.  For
+verified deletes (every requested key resident — what the OCF keystore
+guarantees) and for duplicate keys the outcomes are identical; the one
+divergence is *unverified* deletes where two DISTINCT keys collide on the
+same 16-bit fingerprint with conjugate buckets and fewer resident copies
+than requests — there the two orders can credit a different lane.  Blind
+deletes corrupt any cuckoo filter anyway, so the control plane never issues
+them.
+
+Hash math is imported from ``repro.core.hashing`` — one spec for kernels,
+host data plane, and the numpy oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import hashing
+from repro.kernels.rank import rank_among_earlier
+
+DEFAULT_BLOCK = 1024
+
+
+def _clear_round(table, target, active, fp):
+    """One clear attempt for every active lane in ``target`` buckets.
+
+    Returns (table, cleared).  Rank = #earlier active lanes clearing the
+    same fingerprint from the same bucket; a lane succeeds when its rank is
+    below the bucket's match count and zeroes the rank-th matching slot, so
+    duplicate lanes of one bucket never race for a slot.
+    """
+    buf, _bucket_size = table.shape
+    rank = rank_among_earlier(target, active, fp=fp)
+    tgt_c = jnp.clip(target, 0, buf - 1)
+    row = table[tgt_c]                                    # [n, bucket_size]
+    match = row == fp[:, None]
+    hits = active & (rank < jnp.sum(match, axis=1).astype(jnp.int32))
+    match_pos = jnp.cumsum(match.astype(jnp.int32), axis=1) - 1
+    is_dest = match & (match_pos == rank[:, None])
+    slot = jnp.argmax(is_dest, axis=1)
+    upd_i = jnp.where(hits, target, buf)                  # OOB -> dropped
+    table = table.at[upd_i, slot].set(jnp.uint32(0), mode="drop")
+    return table, hits
+
+
+def _delete_kernel(n_ref, table_in_ref, hi_ref, lo_ref, valid_ref, table_ref,
+                   ok_ref, *, fp_bits: int):
+    del table_in_ref  # aliased to table_ref (the output) — read/write there
+    n_buckets = n_ref[0, 0]
+    table = table_ref[...]
+    hi = hi_ref[...]
+    lo = lo_ref[...]
+    valid = valid_ref[...]
+    fp = hashing.fingerprint(hi, lo, fp_bits)
+    i1 = hashing.index_hash_dyn(hi, lo, n_buckets).astype(jnp.int32)
+    i2 = hashing.alt_index_dyn(i1, fp, n_buckets).astype(jnp.int32)
+    table, ok1 = _clear_round(table, i1, valid, fp)
+    table, ok2 = _clear_round(table, i2, valid & ~ok1, fp)
+    table_ref[...] = table
+    ok_ref[...] = ok1 | ok2
+
+
+@functools.partial(jax.jit, static_argnames=("fp_bits", "block", "interpret"))
+def delete_bulk(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
+                fp_bits: int, n_buckets=None, valid=None,
+                block: int = DEFAULT_BLOCK, interpret: bool = True
+                ) -> tuple[jax.Array, jax.Array]:
+    """Fused bulk delete -> (new_table, deleted bool[N]).
+
+    N must be a block multiple (ops.py pads).  ``n_buckets`` is the ACTIVE
+    bucket count (may be < ``table.shape[0]`` for the OCF's pow2 buffer).
+    Lanes with ``valid=False`` never touch the table.  Callers are expected
+    to have verified membership against the keystore (the OCF control plane
+    does) — like every cuckoo delete, clearing a fingerprint that was never
+    inserted corrupts another key's slot.
+    """
+    n = hi.shape[0]
+    block = min(block, n)
+    assert n % block == 0, f"{n=} not a multiple of {block=}"
+    buffer_buckets, bucket_size = table.shape
+    if n_buckets is None:
+        n_buckets = buffer_buckets
+    if valid is None:
+        valid = jnp.ones((n,), bool)
+    n_arr = jnp.asarray(n_buckets, jnp.int32).reshape(1, 1)
+    grid = (n // block,)
+    smem_spec = pl.BlockSpec((1, 1), lambda i: (0, 0),
+                             memory_space=pltpu.SMEM)
+    key_spec = pl.BlockSpec((block,), lambda i: (i,))
+    table_spec = pl.BlockSpec((buffer_buckets, bucket_size), lambda i: (0, 0))
+    new_table, ok = pl.pallas_call(
+        functools.partial(_delete_kernel, fp_bits=fp_bits),
+        grid=grid,
+        in_specs=[smem_spec, table_spec, key_spec, key_spec, key_spec],
+        out_specs=[table_spec, pl.BlockSpec((block,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct(table.shape, table.dtype),
+                   jax.ShapeDtypeStruct((n,), jnp.bool_)],
+        input_output_aliases={1: 0},   # table updates in place across steps
+        interpret=interpret,
+    )(n_arr, table, hi.astype(jnp.uint32), lo.astype(jnp.uint32), valid)
+    return new_table, ok

@@ -1,10 +1,20 @@
-"""Pallas TPU kernel: fused hash + optimistic single-round bulk insert.
+"""Pallas TPU kernel: fused hash + bulk insert with bounded eviction rounds.
 
-The device-side analogue of ``core.filter.parallel_insert_once`` — one
-fully-vectorized placement round (home bucket, then alternate bucket) with
-**no eviction chains**: the ~95% uncontended mass of a batch lands in one
-kernel pass; the contended residue falls back to the lax.scan eviction path
-(see ``core.filter_ops.FilterOps.insert``).
+The device-side analogue of ``core.filter.bulk_insert_hybrid`` — and since
+PR 3 the *whole* insert, not just the optimistic prefix.  One kernel pass
+does:
+
+  1. two fully-vectorized optimistic placement rounds (home bucket, then
+     alternate bucket) — the ~95% uncontended mass of a batch lands here;
+  2. up to ``evict_rounds`` **device-side eviction rounds** for the residue:
+     each round re-attempts the carried fingerprint against empty slots of
+     its current bucket, then performs one displacement per contended bucket
+     (kick a victim, take its slot, chase the victim to its alternate
+     bucket) — the bounded-multi-round optimistic schedule Cuckoo-GPU-style
+     accelerator filters use instead of pointer-chasing chains;
+  3. per-lane rollback for chains that did not finish inside the budget, so
+     a failed insert NEVER orphans a resident fingerprint (the same
+     transactional guarantee as ``pyfilter.PyCuckooFilter.insert``).
 
 Schedule:
   * the table (the OCF's pow2 buffer) is block-resident in VMEM and aliased
@@ -18,7 +28,20 @@ Schedule:
     the identical "number of earlier lanes targeting my bucket" rank, so a
     single-block batch reproduces ``parallel_insert_once`` table-for-table);
   * each fitting lane writes one empty slot of its bucket: rank-th empty
-    slot, so distinct lanes of a bucket never collide.
+    slot, so distinct lanes of a bucket never collide;
+  * the eviction loop is a ``lax.while_loop`` that exits as soon as every
+    lane has landed — an uncontended batch pays zero eviction rounds.
+
+Eviction-round invariants (why rollback is conflict-free):
+  * one kick per bucket per round (rank-0 lane wins; later lanes retry next
+    round), so two lanes never kick the same slot in the same round;
+  * a kicked slot is marked **dirty** and never kicked again this
+    invocation, so across rounds every table slot is written by at most one
+    lane — rollback scatters of failed lanes touch only slots they own;
+  * a lane's preferred kick slot rotates ``steps % bucket_size`` exactly
+    like the sequential chain (``pyfilter`` / ``core.filter._insert_one``),
+    so a single-lane residue walks the identical chain and produces the
+    identical table while its chain stays within the round budget.
 
 Hash math is imported from ``repro.core.hashing`` — one spec for kernels,
 host data plane, and the numpy oracle.
@@ -33,23 +56,27 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import hashing
+from repro.kernels.rank import rank_among_earlier
 
 DEFAULT_BLOCK = 1024
+# Bounded eviction budget.  The loop is a while_loop that exits as soon as
+# every lane lands, so an easy batch pays zero rounds regardless of the
+# bound; 32 rounds fully drains random batches at the OCF's o_max=0.85
+# operating load.  Harder regimes need more budget (the 0.9-load parity
+# test passes evict_rounds=64); lanes that exhaust it roll back and report
+# False, which the OCF answers with a grow+rebuild.
+DEFAULT_EVICT_ROUNDS = 32
 
 
 def _place_round(table, target, active, fp):
     """One placement attempt for every active lane into ``target`` buckets.
 
     Returns (table, placed).  Same math as the host optimistic round, with
-    the stable-argsort rank replaced by a broadcast-compare count (identical
-    result: rank = #earlier active lanes targeting the same bucket).
+    the stable-argsort rank replaced by the broadcast-compare count
+    (``kernels.rank`` — identical result).
     """
     buf, _bucket_size = table.shape
-    n = target.shape[0]
-    li = jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)   # lane i (rows)
-    lj = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)   # lane j (cols)
-    same = (target[:, None] == target[None, :]) & active[None, :] & (lj < li)
-    rank = jnp.sum(same, axis=1).astype(jnp.int32)
+    rank = rank_among_earlier(target, active)
     tgt_c = jnp.clip(target, 0, buf - 1)
     free = jnp.sum(table == 0, axis=1).astype(jnp.int32)  # empties per bucket
     fits = active & (rank < free[tgt_c])
@@ -62,8 +89,112 @@ def _place_round(table, target, active, fp):
     return table, fits
 
 
+def _evict_rounds(table, fp, start_bucket, residue, n_buckets, rounds: int):
+    """Bounded device-side eviction rounds for the contended residue.
+
+    Each residual lane carries a fingerprint (initially its own; after a
+    kick, the victim's) and a current bucket.  Per round:
+
+      phase A — try to place the carried fp into an empty slot of the
+                current bucket (rank-resolved, same as the optimistic round);
+      phase B — lanes still carrying kick: the rank-0 lane per bucket swaps
+                its carried fp into the first non-dirty slot (rotating from
+                ``steps % bucket_size``), takes the victim, and chases it to
+                the victim's alternate bucket.
+
+    Lanes still carrying after ``rounds`` roll their kicks back in reverse
+    (restoring every victim to its original slot) and report failure.
+    Returns (table, completed bool[N]).
+    """
+    buf, bucket_size = table.shape
+    n = fp.shape[0]
+    slot_iota = jax.lax.broadcasted_iota(jnp.int32, (n, bucket_size), 1)
+
+    def round_body(carry):
+        (r, table, dirty, carried, bucket, active, steps, hb, hs, hw) = carry
+        # phase A: carried fp into an empty slot of the current bucket.
+        table, placed = _place_round(table, bucket, active, carried)
+        active = active & ~placed
+
+        # A completed lane will never roll back, so its kicked slots no
+        # longer need rollback protection — release them for later kicks
+        # (without this, long chains starve on fully-dirty hot buckets).
+        def release(t, dirty):
+            has = placed & (t < steps)
+            upd_i = jnp.where(has, hb[:, t], buf)
+            return dirty.at[upd_i, hs[:, t]].set(False, mode="drop")
+
+        dirty = jax.lax.cond(
+            jnp.any(placed & (steps > 0)),
+            lambda d: jax.lax.fori_loop(0, r + 1, release, d),
+            lambda d: d, dirty)
+        # phase B: one kick per bucket — earliest active lane wins the round.
+        first = active & (rank_among_earlier(bucket, active) == 0)
+        b_c = jnp.clip(bucket, 0, buf - 1)
+        # First non-dirty slot, rotating from the sequential chain's
+        # preferred slot (steps % bucket_size) — dirty slots hold another
+        # lane's kick and are off-limits (rollback exclusivity).
+        pos = (slot_iota + (steps % bucket_size)[:, None]) % bucket_size
+        cand_free = ~jnp.take_along_axis(dirty[b_c], pos, axis=1)
+        kick = first & jnp.any(cand_free, axis=1)
+        k = jnp.argmax(cand_free, axis=1)
+        slot = jnp.take_along_axis(pos, k[:, None], axis=1)[:, 0]
+        victim = table[b_c, slot]
+        upd_i = jnp.where(kick, bucket, buf)              # OOB -> dropped
+        table = table.at[upd_i, slot].set(carried, mode="drop")
+        dirty = dirty.at[upd_i, slot].set(True, mode="drop")
+        # Per-lane chain history (bucket, slot, written value) at column
+        # ``steps`` — what rollback needs to unwind a failed chain.
+        onehot = (jax.lax.broadcasted_iota(jnp.int32, (n, rounds), 1)
+                  == steps[:, None]) & kick[:, None]
+        hb = jnp.where(onehot, bucket[:, None], hb)
+        hs = jnp.where(onehot, slot[:, None], hs)
+        hw = jnp.where(onehot, carried[:, None], hw)
+        nxt = hashing.alt_index_dyn(b_c, victim, n_buckets).astype(jnp.int32)
+        carried = jnp.where(kick, victim, carried)
+        bucket = jnp.where(kick, nxt, bucket)
+        steps = steps + kick.astype(jnp.int32)
+        return (r + 1, table, dirty, carried, bucket, active, steps, hb, hs,
+                hw)
+
+    def round_cond(carry):
+        r, _t, _d, _c, _b, active, *_ = carry
+        return (r < rounds) & jnp.any(active)
+
+    init = (jnp.int32(0), table, jnp.zeros(table.shape, jnp.bool_),
+            fp, start_bucket, residue, jnp.zeros((n,), jnp.int32),
+            jnp.zeros((n, rounds), jnp.int32),
+            jnp.zeros((n, rounds), jnp.int32),
+            jnp.zeros((n, rounds), jnp.uint32))
+    (_r, table, _dirty, carried, _bucket, active, steps, hb, hs,
+     hw) = jax.lax.while_loop(round_cond, round_body, init)
+
+    # Rollback: lanes still carrying restore their kicks newest-first; the
+    # dirty discipline above makes every restored slot exclusively theirs.
+    failed = active
+
+    def rb_body(k, carry):
+        table, cur = carry
+        t = steps - 1 - k
+        do = failed & (t >= 0)
+        t_c = jnp.clip(t, 0, rounds - 1)[:, None]
+        b = jnp.take_along_axis(hb, t_c, axis=1)[:, 0]
+        s = jnp.take_along_axis(hs, t_c, axis=1)[:, 0]
+        w = jnp.take_along_axis(hw, t_c, axis=1)[:, 0]
+        upd_i = jnp.where(do, b, buf)
+        table = table.at[upd_i, s].set(cur, mode="drop")
+        cur = jnp.where(do, w, cur)
+        return table, cur
+
+    table, _cur = jax.lax.cond(
+        jnp.any(failed),
+        lambda tc: jax.lax.fori_loop(0, rounds, rb_body, tc),
+        lambda tc: tc, (table, carried))
+    return table, residue & ~failed
+
+
 def _insert_kernel(n_ref, table_in_ref, hi_ref, lo_ref, valid_ref, table_ref,
-                   ok_ref, *, fp_bits: int):
+                   ok_ref, *, fp_bits: int, evict_rounds: int):
     del table_in_ref  # aliased to table_ref (the output) — read/write there
     n_buckets = n_ref[0, 0]
     table = table_ref[...]
@@ -75,20 +206,32 @@ def _insert_kernel(n_ref, table_in_ref, hi_ref, lo_ref, valid_ref, table_ref,
     i2 = hashing.alt_index_dyn(i1, fp, n_buckets).astype(jnp.int32)
     table, ok1 = _place_round(table, i1, valid, fp)
     table, ok2 = _place_round(table, i2, valid & ~ok1, fp)
+    ok = ok1 | ok2
+    if evict_rounds > 0:
+        # Chains start at the alternate bucket, matching the sequential path.
+        table, completed = _evict_rounds(table, fp, i2, valid & ~ok,
+                                         n_buckets, evict_rounds)
+        ok = ok | completed
     table_ref[...] = table
-    ok_ref[...] = ok1 | ok2
+    ok_ref[...] = ok
 
 
-@functools.partial(jax.jit, static_argnames=("fp_bits", "block", "interpret"))
-def insert_once(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
+@functools.partial(jax.jit, static_argnames=("fp_bits", "evict_rounds",
+                                             "block", "interpret"))
+def insert_bulk(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
                 fp_bits: int, n_buckets=None, valid=None,
+                evict_rounds: int = DEFAULT_EVICT_ROUNDS,
                 block: int = DEFAULT_BLOCK, interpret: bool = True
                 ) -> tuple[jax.Array, jax.Array]:
-    """One optimistic insert round -> (new_table, placed bool[N]).
+    """Full bulk insert (optimistic rounds + bounded eviction rounds)
+    -> (new_table, placed bool[N]).
 
     N must be a block multiple (ops.py pads).  ``n_buckets`` is the ACTIVE
     bucket count (may be < ``table.shape[0]`` for the OCF's pow2 buffer).
-    Lanes with ``valid=False`` never touch the table.
+    Lanes with ``valid=False`` never touch the table.  ``evict_rounds=0``
+    degenerates to the PR-1 optimistic-only kernel (``insert_once``).
+    Lanes whose chain exceeds the round budget roll back and report False —
+    the control plane treats that exactly like a full filter (grow+rebuild).
     """
     n = hi.shape[0]
     block = min(block, n)
@@ -105,7 +248,8 @@ def insert_once(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
     key_spec = pl.BlockSpec((block,), lambda i: (i,))
     table_spec = pl.BlockSpec((buffer_buckets, bucket_size), lambda i: (0, 0))
     new_table, ok = pl.pallas_call(
-        functools.partial(_insert_kernel, fp_bits=fp_bits),
+        functools.partial(_insert_kernel, fp_bits=fp_bits,
+                          evict_rounds=evict_rounds),
         grid=grid,
         in_specs=[smem_spec, table_spec, key_spec, key_spec, key_spec],
         out_specs=[table_spec, pl.BlockSpec((block,), lambda i: (i,))],
@@ -115,3 +259,17 @@ def insert_once(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
         interpret=interpret,
     )(n_arr, table, hi.astype(jnp.uint32), lo.astype(jnp.uint32), valid)
     return new_table, ok
+
+
+def insert_once(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
+                fp_bits: int, n_buckets=None, valid=None,
+                block: int = DEFAULT_BLOCK, interpret: bool = True
+                ) -> tuple[jax.Array, jax.Array]:
+    """One optimistic insert round (no eviction) -> (new_table, placed).
+
+    The PR-1 entry point, kept for callers that sweep the residue
+    themselves; ``insert_bulk`` with eviction rounds is the full fast path.
+    """
+    return insert_bulk(table, hi, lo, fp_bits=fp_bits, n_buckets=n_buckets,
+                       valid=valid, evict_rounds=0, block=block,
+                       interpret=interpret)

@@ -17,13 +17,16 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.delete import delete_bulk
 from repro.kernels.fingerprint import fingerprint_hash
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.insert import insert_once
+from repro.kernels.insert import DEFAULT_EVICT_ROUNDS, insert_bulk, insert_once
 from repro.kernels.probe import probe
 
-# Whole-table VMEM residency budget for the filter kernels (the probe/insert
-# BlockSpecs pin the full table per program; larger filters shard first).
+# VMEM residency budget for the filter kernels.  The probe/insert/delete
+# BlockSpecs pin the full table per program, and the mutating kernels carry
+# extra VMEM-resident working state (see ``kernel_vmem_bytes``); larger
+# filters shard first (core.distributed).
 VMEM_TABLE_BUDGET = 12 * 2**20
 
 
@@ -31,19 +34,53 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def _use_kernel(use_pallas: str, *, table_bytes: int, n_keys: int) -> bool:
+# Budgeted bytes/element for the [block, block] broadcast-compare rank
+# (kernels/rank.py).  Bounds: ~1 B/elem if Mosaic streams the iota/compare/
+# reduce tiles (the common lowering), ~9 B/elem if the two int32 iotas and
+# the bool mask fully materialize.  4 is the engineering estimate pending
+# the real-TPU pass (ROADMAP "TPU-hardware validation"); biasing high only
+# costs an early fallback to the jnp path, biasing low risks VMEM OOM.
+RANK_BYTES_PER_ELEM = 4
+
+
+def kernel_vmem_bytes(op: str, *, table_bytes: int, block: int,
+                      evict_rounds: int = 0) -> int:
+    """Estimated peak VMEM footprint of one filter-kernel program.
+
+    Used by 'auto' dispatch so budgeting reflects what each kernel actually
+    pins, not just the table:
+      * probe  — the table plus two gathered bucket rows per lane;
+      * delete — the table plus the [block, block] broadcast-compare rank
+        working set (``RANK_BYTES_PER_ELEM``);
+      * insert — the table twice over (the dirty bitmap rides at table
+        shape), the rank working set, and the 3 per-lane eviction-history
+        arrays of width ``evict_rounds``.
+    """
+    rank_bytes = RANK_BYTES_PER_ELEM * block * block
+    if op == "probe":
+        return table_bytes + 16 * block
+    if op == "delete":
+        return table_bytes + rank_bytes + 16 * block
+    if op == "insert":
+        return (2 * table_bytes + rank_bytes
+                + 3 * 4 * block * max(evict_rounds, 1) + 16 * block)
+    raise ValueError(f"unknown filter kernel op {op!r}")
+
+
+def _use_kernel(use_pallas: str, *, vmem_bytes: int, n_keys: int) -> bool:
     """True when the Pallas kernel should run (vs the pure-jnp ref path).
 
     'always' -> kernel, unconditionally (interpret mode off-TPU).
     'never'  -> ref path, unconditionally.
-    'auto'   -> kernel iff the table fits the VMEM budget AND, off-TPU, the
+    'auto'   -> kernel iff the op's estimated VMEM footprint (see
+                ``kernel_vmem_bytes``) fits the budget AND, off-TPU, the
                 batch is small enough for interpret mode to be sensible.
     """
     if use_pallas == "never":
         return False
     if use_pallas == "always":
         return True
-    if table_bytes > VMEM_TABLE_BUDGET:
+    if vmem_bytes > VMEM_TABLE_BUDGET:
         return False
     if not _on_tpu() and n_keys > 65536:
         return False
@@ -61,7 +98,7 @@ def _pad_to(x: jax.Array, mult: int):
 def hash_keys(hi: jax.Array, lo: jax.Array, *, fp_bits: int, n_buckets: int,
               use_pallas: str = "auto"):
     """(fp, i1, i2) via the fingerprint kernel (padded to the block size)."""
-    if hi.shape[0] == 0 or not _use_kernel(use_pallas, table_bytes=0,
+    if hi.shape[0] == 0 or not _use_kernel(use_pallas, vmem_bytes=0,
                                            n_keys=hi.shape[0]):
         return ref.fingerprint_ref(hi, lo, fp_bits=fp_bits, n_buckets=n_buckets)
     block = 1024 if hi.shape[0] >= 1024 else hi.shape[0]
@@ -83,11 +120,13 @@ def filter_lookup(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
     """
     if hi.shape[0] == 0:
         return jnp.zeros((0,), jnp.bool_)
-    if not _use_kernel(use_pallas, table_bytes=table.size * 4,
+    block = 1024 if hi.shape[0] >= 1024 else hi.shape[0]
+    if not _use_kernel(use_pallas,
+                       vmem_bytes=kernel_vmem_bytes(
+                           "probe", table_bytes=table.size * 4, block=block),
                        n_keys=hi.shape[0]):
         return ref.probe_ref(table, hi, lo, fp_bits=fp_bits,
                              n_buckets=n_buckets)
-    block = 1024 if hi.shape[0] >= 1024 else hi.shape[0]
     hi_p, n = _pad_to(hi, block)
     lo_p, _ = _pad_to(lo, block)
     hit = probe(table, hi_p, lo_p, fp_bits=fp_bits, n_buckets=n_buckets,
@@ -97,26 +136,74 @@ def filter_lookup(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
 
 def filter_insert(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
                   fp_bits: int, n_buckets=None, valid=None,
-                  use_pallas: str = "auto") -> tuple[jax.Array, jax.Array]:
-    """Optimistic single-round bulk insert -> (new_table, placed bool[N]).
+                  evict_rounds: int = 0, use_pallas: str = "auto"
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Fused bulk insert -> (new_table, placed bool[N]).
 
-    The device-side fast path for ~95% of a batch; callers sweep the
-    ``~placed`` residue through the eviction-chain scan (see
-    ``core.filter_ops.FilterOps.insert``).
+    With ``evict_rounds=0`` this is the PR-1 optimistic single round — the
+    fast path for ~95% of a batch, with the caller sweeping the residue.
+    With ``evict_rounds>0`` the contended residue is resolved by bounded
+    device-side eviction rounds inside the same kernel pass, so the WHOLE
+    insert stays on-device (``core.filter_ops.FilterOps.insert``); lanes
+    whose chain exceeds the budget roll back losslessly and report False.
+
+    The non-kernel fallback keeps exact scan semantics: optimistic jnp round
+    plus the ``lax.scan`` eviction path over the residue.
     """
     if hi.shape[0] == 0:
         return table, jnp.zeros((0,), jnp.bool_)
     if valid is None:
         valid = jnp.ones(hi.shape, bool)
-    if not _use_kernel(use_pallas, table_bytes=table.size * 4,
-                       n_keys=hi.shape[0]):
-        return ref.insert_once_ref(table, hi, lo, fp_bits=fp_bits,
-                                   n_buckets=n_buckets, valid=valid)
     block = 1024 if hi.shape[0] >= 1024 else hi.shape[0]
+    if not _use_kernel(use_pallas,
+                       vmem_bytes=kernel_vmem_bytes(
+                           "insert", table_bytes=table.size * 4, block=block,
+                           evict_rounds=evict_rounds),
+                       n_keys=hi.shape[0]):
+        table, placed = ref.insert_once_ref(table, hi, lo, fp_bits=fp_bits,
+                                            n_buckets=n_buckets, valid=valid)
+        if evict_rounds == 0:
+            return table, placed
+        table, ok2 = ref.insert_residue_ref(table, hi, lo, fp_bits=fp_bits,
+                                            n_buckets=n_buckets,
+                                            valid=valid & ~placed)
+        return table, placed | ok2
     hi_p, n = _pad_to(hi, block)
     lo_p, _ = _pad_to(lo, block)
     valid_p, _ = _pad_to(valid, block)   # pads False: never touches the table
-    new_table, ok = insert_once(table, hi_p, lo_p, fp_bits=fp_bits,
+    new_table, ok = insert_bulk(table, hi_p, lo_p, fp_bits=fp_bits,
+                                n_buckets=n_buckets, valid=valid_p,
+                                evict_rounds=evict_rounds,
+                                block=block, interpret=not _on_tpu())
+    return new_table, ok[:n]
+
+
+def filter_delete(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
+                  fp_bits: int, n_buckets=None, valid=None,
+                  use_pallas: str = "auto") -> tuple[jax.Array, jax.Array]:
+    """Fused bulk delete -> (new_table, deleted bool[N]).
+
+    Device-side first-match-slot clearing via ``kernels.delete``; the
+    non-kernel path falls back to the sequential ``lax.scan`` oracle
+    (``ref.delete_ref``).  Callers must pre-verify membership (the OCF
+    keystore does) — blind deletes corrupt foreign fingerprints on every
+    cuckoo-filter implementation, kernels included.
+    """
+    if hi.shape[0] == 0:
+        return table, jnp.zeros((0,), jnp.bool_)
+    if valid is None:
+        valid = jnp.ones(hi.shape, bool)
+    block = 1024 if hi.shape[0] >= 1024 else hi.shape[0]
+    if not _use_kernel(use_pallas,
+                       vmem_bytes=kernel_vmem_bytes(
+                           "delete", table_bytes=table.size * 4, block=block),
+                       n_keys=hi.shape[0]):
+        return ref.delete_ref(table, hi, lo, fp_bits=fp_bits,
+                              n_buckets=n_buckets, valid=valid)
+    hi_p, n = _pad_to(hi, block)
+    lo_p, _ = _pad_to(lo, block)
+    valid_p, _ = _pad_to(valid, block)   # pads False: never touches the table
+    new_table, ok = delete_bulk(table, hi_p, lo_p, fp_bits=fp_bits,
                                 n_buckets=n_buckets, valid=valid_p,
                                 block=block, interpret=not _on_tpu())
     return new_table, ok[:n]
@@ -149,6 +236,8 @@ def attention(q, k, v, *, causal: bool = True, window: int | None = None,
                                    key_positions=key_positions)
 
 
-__all__ = ["hash_keys", "filter_lookup", "filter_insert", "attention",
-           "fingerprint_hash", "probe", "insert_once", "flash_attention",
-           "VMEM_TABLE_BUDGET"]
+__all__ = ["hash_keys", "filter_lookup", "filter_insert", "filter_delete",
+           "attention", "fingerprint_hash", "probe", "insert_once",
+           "insert_bulk", "delete_bulk", "flash_attention",
+           "kernel_vmem_bytes", "VMEM_TABLE_BUDGET",
+           "DEFAULT_EVICT_ROUNDS"]

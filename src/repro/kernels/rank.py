@@ -1,0 +1,37 @@
+"""Sort-free intra-block conflict ranking shared by the mutating kernels.
+
+Every Pallas filter kernel that writes the table (insert placement rounds,
+eviction kicks, delete clears) must serialize lanes of one block that target
+the same bucket.  The host data plane does this with a stable argsort
+(``core.filter.parallel_insert_once``); on the VPU a [BLOCK, BLOCK]
+broadcast-compare computes the identical quantity without a device sort:
+
+    rank(i) = #active lanes j < i targeting the same bucket (and, for
+              deletes, carrying the same fingerprint)
+
+One definition here keeps the three call sites (``insert._place_round``,
+``insert._evict_rounds`` phase B, ``delete._clear_round``) in lockstep with
+each other and with ``ops.kernel_vmem_bytes``' estimate of the compare
+working set.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rank_among_earlier(target: jax.Array, active: jax.Array,
+                       fp: jax.Array | None = None) -> jax.Array:
+    """Per-lane conflict rank among earlier active lanes -> int32[N].
+
+    ``fp`` refines the grouping to (bucket, fingerprint) pairs — the delete
+    kernel's duplicate-key discipline.  Matches the host path's stable-sort
+    rank bit for bit.
+    """
+    n = target.shape[0]
+    li = jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)   # lane i (rows)
+    lj = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)   # lane j (cols)
+    same = (target[:, None] == target[None, :]) & active[None, :] & (lj < li)
+    if fp is not None:
+        same &= fp[:, None] == fp[None, :]
+    return jnp.sum(same, axis=1).astype(jnp.int32)

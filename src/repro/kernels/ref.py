@@ -62,6 +62,42 @@ def insert_once_ref(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
     return state.table, placed
 
 
+def insert_residue_ref(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
+                       fp_bits: int, n_buckets=None, valid=None,
+                       max_disp: int = 500) -> tuple[jax.Array, jax.Array]:
+    """Sequential eviction-chain sweep on a raw table -> (table, placed).
+
+    The scan counterpart of the kernel's bounded eviction rounds — used by
+    ``ops.filter_insert`` when ``evict_rounds>0`` resolves to the non-kernel
+    path, so both dispatch arms finish the whole insert themselves."""
+    if n_buckets is None:
+        n_buckets = table.shape[0]
+    state = jfilter.FilterState(table, jnp.zeros((), jnp.int32),
+                                jnp.asarray(n_buckets, jnp.int32))
+    state, ok = jfilter.bulk_insert(state, hi, lo, fp_bits=fp_bits,
+                                    max_disp=max_disp, valid=valid)
+    return state.table, ok
+
+
+# ------------------------------------------------------------------ delete --
+
+
+def delete_ref(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
+               fp_bits: int, n_buckets=None, valid=None
+               ) -> tuple[jax.Array, jax.Array]:
+    """Sequential-semantics bulk delete on a raw table -> (table, deleted).
+
+    Delegates to ``core.filter.bulk_delete`` so the oracle and the host
+    fallback are literally the same code (mirrors ``insert_once_ref``)."""
+    if n_buckets is None:
+        n_buckets = table.shape[0]
+    state = jfilter.FilterState(table, jnp.zeros((), jnp.int32),
+                                jnp.asarray(n_buckets, jnp.int32))
+    state, ok = jfilter.bulk_delete(state, hi, lo, fp_bits=fp_bits,
+                                    valid=valid)
+    return state.table, ok
+
+
 # -------------------------------------------------------- flash attention --
 
 

@@ -6,6 +6,12 @@ cached somewhere in the cluster?" in O(1) filter probes *before* any page
 table is consulted, supports true deletes on eviction (the cuckoo advantage
 over bloom — Cassandra's filters cannot do this), and burst arrivals drive
 the EOF resize controller instead of forcing a flush/rebuild.
+
+With ``backend="pallas"`` the whole index lifecycle is device-kernel-fused
+through ``FilterOps``: probes hit the fused lookup kernel, admissions the
+insert kernel (eviction residue resolved on-device), and LRU/sequence
+evictions the first-match-slot delete kernel — the serving path never waits
+on a sequential ``lax.scan``.
 """
 from __future__ import annotations
 

@@ -117,10 +117,12 @@ def test_probe_table_backend_parity(rng):
 
 
 def test_ocf_pallas_backend_dispatches_through_kernels(rng, monkeypatch):
-    """OCF(backend='pallas') must reach the Pallas kernels for both the
-    probe and the optimistic insert round (acceptance criterion)."""
-    calls = {"probe": 0, "insert": 0}
-    real_probe, real_insert = kops.probe, kops.insert_once
+    """OCF(backend='pallas') must reach the Pallas kernels for the probe,
+    the full insert (incl. eviction rounds), and the delete — with NO
+    lax.scan fallback anywhere on the path (acceptance criterion)."""
+    calls = {"probe": 0, "insert": 0, "delete": 0, "scan_fallback": 0}
+    real_probe, real_insert = kops.probe, kops.insert_bulk
+    real_delete = kops.delete_bulk
 
     def probe_spy(*a, **kw):
         calls["probe"] += 1
@@ -130,8 +132,20 @@ def test_ocf_pallas_backend_dispatches_through_kernels(rng, monkeypatch):
         calls["insert"] += 1
         return real_insert(*a, **kw)
 
+    def delete_spy(*a, **kw):
+        calls["delete"] += 1
+        return real_delete(*a, **kw)
+
+    def scan_spy(*a, **kw):
+        calls["scan_fallback"] += 1
+        raise AssertionError("pallas backend fell back to the scan path")
+
     monkeypatch.setattr(kops, "probe", probe_spy)
-    monkeypatch.setattr(kops, "insert_once", insert_spy)
+    monkeypatch.setattr(kops, "insert_bulk", insert_spy)
+    monkeypatch.setattr(kops, "delete_bulk", delete_spy)
+    from repro.core import filter_ops as fops_mod
+    monkeypatch.setattr(fops_mod.jfilter, "bulk_insert", scan_spy)
+    monkeypatch.setattr(fops_mod.jfilter, "bulk_delete", scan_spy)
     ocf = OCF(OcfConfig(capacity=4096, backend="pallas"))
     keys = random_keys(rng, 1000)
     ocf.insert(keys)
@@ -139,10 +153,16 @@ def test_ocf_pallas_backend_dispatches_through_kernels(rng, monkeypatch):
     hits = ocf.lookup(keys)
     assert calls["probe"] > 0, "lookup did not go through the Pallas kernel"
     assert hits.all()
+    ocf.delete(keys[:300])
+    assert calls["delete"] > 0, "delete did not go through the Pallas kernel"
+    assert calls["scan_fallback"] == 0
+    assert ocf.lookup(keys[300:]).all(), "delete disturbed a resident key"
+    monkeypatch.undo()  # un-patch the scan path before the jnp comparison
     # same answers as the jnp backend end-to-end
     ocf_j = OCF(OcfConfig(capacity=4096, backend="jnp"))
     ocf_j.insert(keys)
-    assert ocf_j.lookup(keys).all()
+    ocf_j.delete(keys[:300])
+    assert ocf_j.lookup(keys[300:]).all()
     assert ocf.count == ocf_j.count
 
 
