@@ -29,6 +29,8 @@ from repro.core import filter as jf
 from repro.core.filter_ops import FilterOps
 from repro.core.keystore import VectorKeystore
 from repro.core.ocf import OCF, OcfConfig
+from repro.kernels.stash import make_stash, stash_occupancy
+from repro.streaming import GenerationConfig, GenerationalFilter
 
 # Anchored to the repo root so run.py writes the same trajectory file no
 # matter which directory it is invoked from.
@@ -105,6 +107,63 @@ def residue_rows(rng, *, backends=("jnp", "pallas"), n_buckets=2048,
     return rows, results
 
 
+def stash_rows(rng, *, backends=("jnp", "pallas"), n_buckets=2048,
+               preload=6000, n=1 << 11, stash_slots=256):
+    """Stash-path rows (ISSUE 4): the same contended workload as
+    ``residue_rows`` but through ``insert_spill`` — overflow parks in the
+    stash instead of rolling back — plus the measured stash hit rate of a
+    lookup over everything that landed."""
+    rows, results = [], {}
+    pre, phi, plo = _pair(rng, preload)
+    _keys, hi, lo = _pair(rng, n)
+    for backend in backends:
+        fops = FilterOps(fp_bits=16, backend=backend)
+        loaded, _ = fops.insert(jf.make_state(n_buckets, 4), phi, plo)
+
+        def spill():
+            return fops.insert_spill(loaded, make_stash(stash_slots), hi, lo)
+
+        t = _time(spill)
+        rows.append((f"filter_insert_spill_{backend}", t / n * 1e6,
+                     int(n / t)))
+        results[f"insert_spill_{backend}_keys_per_s"] = int(n / t)
+        st, stash, ok = spill()
+        spilled = int(stash_occupancy(stash))
+        hits = np.asarray(fops.lookup_with_stash(st, stash, hi, lo))
+        table_only = np.asarray(fops.lookup(st, hi, lo))
+        stash_hits = int((hits & ~table_only).sum())
+        results[f"stash_spilled_{backend}"] = spilled
+        results[f"stash_hit_rate_{backend}"] = (
+            stash_hits / max(1, int(hits.sum())))
+        rows.append((f"stash_hit_rate_{backend}", 0.0,
+                     results[f"stash_hit_rate_{backend}"]))
+    return rows, results
+
+
+def generational_rows(rng, *, backends=("jnp", "pallas"), k=4,
+                      capacity=1 << 14, n=1 << 15):
+    """Generational-lookup rows (ISSUE 4): keys/s for a probe that fans
+    out over K live TTL generations (+ stashes) in one fused device call —
+    the streaming subsystem's serving hot path."""
+    rows, results = [], {}
+    keys = rng.randint(0, 2 ** 63, size=n, dtype=np.int64).astype(np.uint64)
+    for backend in backends:
+        gf = GenerationalFilter(GenerationConfig(
+            generations=k, capacity=capacity, backend=backend), now=0.0)
+        per_gen = n // k
+        for g in range(k):
+            gf.insert(keys[g * per_gen:(g + 1) * per_gen], now=0.0)
+            if g < k - 1:
+                gf.rotate(now=0.0)
+        assert gf.live_generations == k
+        t = _time(lambda: gf.lookup(keys, now=0.0))
+        rows.append((f"generational_lookup_{backend}", t / n * 1e6,
+                     int(n / t)))
+        results[f"generational_lookup_{backend}_keys_per_s"] = int(n / t)
+        results[f"generational_lookup_{backend}_generations"] = k
+    return rows, results
+
+
 def keystore_rows(rng, *, n=KEYSTORE_BATCH):
     """Vectorized keystore vs the seed per-key dict loop on one big batch."""
     keys = rng.randint(0, 2 ** 63, size=n, dtype=np.int64).astype(np.uint64)
@@ -151,7 +210,8 @@ def ocf_insert_rows(rng, *, n=KEYSTORE_BATCH):
 def run(json_path: str | None = JSON_PATH):
     rng = np.random.RandomState(0)
     rows, results = [], {"backend_default": jax.default_backend()}
-    for fn in (backend_rows, residue_rows, keystore_rows, ocf_insert_rows):
+    for fn in (backend_rows, residue_rows, stash_rows, generational_rows,
+               keystore_rows, ocf_insert_rows):
         r, res = fn(rng)
         rows += r
         results.update(res)

@@ -13,6 +13,14 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+echo "== tracked-artifact guard =="
+# PR 3 untracked 38 stray .pyc files; fail fast if any creep back in.
+if git ls-files | grep -E '(\.pyc$|(^|/)__pycache__(/|$))'; then
+  echo "ERROR: compiled Python artifacts are tracked (see list above);"
+  echo "       git rm --cached them — .gitignore already covers the paths."
+  exit 1
+fi
+
 echo "== tier-1 test suite =="
 python -m pytest -m tier1 -x -q
 

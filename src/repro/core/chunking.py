@@ -1,0 +1,44 @@
+"""Host-side batching helpers shared by the filter control planes.
+
+One definition of the fixed-chunk device-batch contract (chunk size, pad
+value, (hi, lo) split, validity mask) for every host controller that feeds
+the FilterOps data plane — the OCF (``core/ocf.py``) and the streaming
+generation ring (``streaming/generations.py``).  Fixed-size chunks with
+validity masks are what keep the jit/kernel cache at one compile per buffer
+size; two drifting copies of this contract would silently desynchronize
+the paths.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing
+
+CHUNK = 4096
+
+
+def pow2_at_least(n: int) -> int:
+    """Smallest power of two >= n (buffer-pool sizing)."""
+    p = 1
+    while p < n:
+        p <<= 1
+    return p
+
+
+def key_chunks(keys: np.ndarray, chunk: int = CHUNK):
+    """Yield (hi, lo, valid, n_real) fixed-size device batches.
+
+    The tail chunk is zero-padded with ``valid=False`` lanes, which never
+    touch a table, so callers compile exactly one executable per chunk
+    shape regardless of batch size.
+    """
+    for i in range(0, keys.size, chunk):
+        part = keys[i:i + chunk]
+        n = part.size
+        if n < chunk:
+            part = np.pad(part, (0, chunk - n))
+        hi, lo = hashing.key_to_u32_pair_np(part)
+        valid = np.zeros(chunk, bool)
+        valid[:n] = True
+        yield jnp.asarray(hi), jnp.asarray(lo), jnp.asarray(valid), n

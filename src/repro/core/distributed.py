@@ -36,6 +36,26 @@ except AttributeError:                # 0.4.x: experimental namespace
     from jax.experimental.shard_map import shard_map as _shard_map
 
 
+def _shard_map_for(backend: str, fn, *, mesh, in_specs, out_specs):
+    """shard_map wrapper that disables the replication check for kernels.
+
+    shard_map's replication checker has no rule for ``pallas_call`` (the
+    reason the Pallas shard probe used to be impossible — ROADMAP item);
+    with fully explicit out_specs the check is advisory here, so it is
+    dropped exactly when the FilterOps dispatch may lower a kernel.  The
+    kwarg was renamed ``check_rep`` -> ``check_vma`` across jax versions.
+    """
+    if backend == "jnp":
+        return _shard_map(fn, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs)
+    try:
+        return _shard_map(fn, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=False)
+    except TypeError:                 # newer jax: check_vma
+        return _shard_map(fn, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=False)
+
+
 class ShardedFilterState(NamedTuple):
     """Stacked per-shard tables: uint32[n_shards, n_buckets, bucket_size]."""
     tables: jax.Array
@@ -47,7 +67,7 @@ def make_sharded_state(n_shards: int, n_buckets: int, bucket_size: int = 4
         tables=jnp.zeros((n_shards, n_buckets, bucket_size), dtype=jnp.uint32))
 
 
-def _local_probe(table, hi, lo, fp_bits: int, backend: str = "jnp"):
+def _local_probe(table, hi, lo, fp_bits: int, backend: str = "auto"):
     """Per-shard membership probe, routed through the FilterOps data plane
     (same backend dispatch as the single-node OCF hot path)."""
     return FilterOps(fp_bits=fp_bits, backend=backend).probe_table(
@@ -56,7 +76,7 @@ def _local_probe(table, hi, lo, fp_bits: int, backend: str = "jnp"):
 
 def distributed_lookup(mesh: Mesh, axis: str, state: ShardedFilterState,
                        hi: jax.Array, lo: jax.Array, *, fp_bits: int,
-                       capacity_factor: float = 2.0, backend: str = "jnp"):
+                       capacity_factor: float = 2.0, backend: str = "auto"):
     """Batched membership across filter shards.
 
     ``hi``/``lo``: uint32[n_shards * per_shard] keys, sharded over ``axis``.
@@ -65,8 +85,11 @@ def distributed_lookup(mesh: Mesh, axis: str, state: ShardedFilterState,
     and the overflow count is the congestion signal for the EOF policy.
 
     ``backend`` selects the local-probe data plane ("jnp" | "pallas" |
-    "auto"); the default stays on the jnp path, which is what shard_map
-    traces on CPU hosts (a sharded Pallas probe is an open item).
+    "auto") inside ``shard_map`` — the same FilterOps dispatch as the
+    single-node hot path.  "auto" resolves per-host: the fused probe kernel
+    on TPU meshes whose shard tables fit the VMEM budget, jnp elsewhere
+    (CPU hosts trace the jnp path unless "pallas" is forced, which runs the
+    kernel in interpret mode — how the parity tests pin it).
     """
     n_shards = mesh.shape[axis]
     per_shard = hi.shape[0] // n_shards
@@ -110,8 +133,8 @@ def distributed_lookup(mesh: Mesh, axis: str, state: ShardedFilterState,
         del my
         return ans, overflow[None]
 
-    fn = _shard_map(
-        shard_fn, mesh=mesh,
+    fn = _shard_map_for(
+        backend, shard_fn, mesh=mesh,
         in_specs=(P(axis), P(axis), P(axis)),
         out_specs=(P(axis), P(axis)))
     return fn(state.tables, hi, lo)
@@ -125,7 +148,7 @@ def local_shard_insert_host(state: ShardedFilterState, shard: int, table
 
 def local_shard_delete_host(state: ShardedFilterState, shard: int,
                             hi: jax.Array, lo: jax.Array, *, fp_bits: int,
-                            backend: str = "jnp", n_buckets=None
+                            backend: str = "auto", n_buckets=None
                             ) -> tuple[ShardedFilterState, jax.Array]:
     """Verified delete on one shard, through the FilterOps data plane.
 
@@ -148,7 +171,7 @@ def local_shard_delete_host(state: ShardedFilterState, shard: int,
 
 @functools.partial(jax.jit, static_argnames=("fp_bits", "backend"))
 def replicated_lookup(tables: jax.Array, hi: jax.Array, lo: jax.Array, *,
-                      fp_bits: int, backend: str = "jnp") -> jax.Array:
+                      fp_bits: int, backend: str = "auto") -> jax.Array:
     """Probe every shard (broadcast query — 'is this key anywhere?')."""
     hit = jax.vmap(lambda t: _local_probe(t, hi, lo, fp_bits, backend))(tables)
     return jnp.any(hit, axis=0)

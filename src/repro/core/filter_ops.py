@@ -43,6 +43,26 @@ from repro.kernels import ref as kref
 Backend = Literal["jnp", "pallas", "auto"]
 
 
+def evict_rounds_for_load(load: float) -> int:
+    """Eviction-round budget for a target operating load, pow2-rounded.
+
+    Cuckoo insert chains lengthen roughly like 1/(1 - load) as the table
+    fills; budgeting ``4 / (1 - load)`` rounds and rounding up to a power
+    of two gives the empirically validated points — 32 rounds drains random
+    batches at the OCF's default ``o_max = 0.85``, the 0.9-load parity
+    tests need 64, and 0.95 maps to 128.  Pow2 rounding keeps the jit cache
+    small (the budget is a static kernel parameter).  Clamped to [8, 256]:
+    below that chains barely exist, above it the per-lane rollback history
+    VMEM cost outgrows what a stash + rotate/grow handles better.
+    """
+    load = min(max(load, 0.0), 0.97)
+    need = 4.0 / (1.0 - load)
+    r = 8
+    while r < need and r < 256:
+        r <<= 1
+    return r
+
+
 @dataclasses.dataclass(frozen=True)
 class FilterOps:
     """Backend-dispatched lookup / insert / delete / rebuild entry points.
@@ -50,37 +70,53 @@ class FilterOps:
     ``max_disp`` bounds the sequential eviction chain of the jnp backend;
     ``evict_rounds`` bounds the device-side eviction rounds of the pallas
     insert kernel (its while_loop exits early, so the bound only costs VMEM
-    for the per-lane rollback history).  Both exhaust the same way: the
-    overflowing key reports False with the table rolled back, and the OCF
-    control plane grows + rebuilds from the keystore.
+    for the per-lane rollback history) and defaults to the budget derived
+    from the 0.85 operating load (``evict_rounds_for_load``).  Both exhaust
+    the same way: the overflowing key reports False with the table rolled
+    back, and the OCF control plane grows + rebuilds from the keystore.
+
+    The ``*_with_stash`` / ``insert_spill`` entry points add the overflow
+    stash (``kernels/stash.py``): exhausted chains park in a fixed-size
+    device-resident side table instead of failing, and lookups check it in
+    the same fused pass — the streaming subsystem's burst escape hatch
+    (``repro.streaming``).
     """
 
     fp_bits: int = 16
     max_disp: int = 500
     backend: Backend = "auto"
-    # Literal (not kops.DEFAULT_EVICT_ROUNDS): entry points that import the
-    # kernel package first would hit it partially initialized here.
-    evict_rounds: int = 32
+    # None -> derived from the OCF's default o_max=0.85 operating load
+    # (= 32 rounds); pass evict_rounds_for_load(o_max) for other loads, the
+    # way OcfConfig.make_filter_ops does.
+    evict_rounds: Optional[int] = None
 
     def __post_init__(self):
         assert self.backend in ("jnp", "pallas", "auto"), (
             f"unknown filter backend {self.backend!r} "
             "(expected 'jnp' | 'pallas' | 'auto')")
+        if self.evict_rounds is None:
+            object.__setattr__(self, "evict_rounds",
+                               evict_rounds_for_load(0.85))
 
     # -------------------------------------------------------- dispatch --
 
-    def resolve(self, table: jax.Array) -> str:
+    def resolve(self, table: jax.Array, *, stash_slots: int = 0) -> str:
         """Concrete backend for this table ('auto' -> hardware decision).
 
         Budgets against the insert kernel's footprint — the most demanding
-        of the three (aliased table + dirty bitmap + eviction history) — so
-        one FilterOps never splits a workload across backends mid-stream.
+        of the three (aliased table + dirty bitmap + eviction history, plus
+        the stash match/spill working set when the caller attaches one) —
+        so one FilterOps never splits a workload across backends
+        mid-stream.  The stash-aware entry points pass ``stash_slots``;
+        an explicit 'pallas'/'jnp' backend skips the budget (caller's
+        call, same as ``use_pallas='always'``).
         """
         if self.backend != "auto":
             return self.backend
         if kops._on_tpu() and kops.kernel_vmem_bytes(
                 "insert", table_bytes=table.size * 4, block=1024,
-                evict_rounds=self.evict_rounds) <= kops.VMEM_TABLE_BUDGET:
+                evict_rounds=self.evict_rounds,
+                stash_slots=stash_slots) <= kops.VMEM_TABLE_BUDGET:
             return "pallas"
         return "jnp"
 
@@ -117,6 +153,50 @@ class FilterOps:
                 state.n_buckets), ok
         return jfilter.bulk_insert_hybrid(state, hi, lo, fp_bits=self.fp_bits,
                                           max_disp=self.max_disp, valid=valid)
+
+    # ------------------------------------------------- stash-aware ops --
+
+    def lookup_with_stash(self, state: jfilter.FilterState,
+                          stash: jax.Array, hi: jax.Array,
+                          lo: jax.Array) -> jax.Array:
+        """Membership against table AND overflow stash -> bool[N].
+
+        pallas: the probe kernel checks the stash in the same fused pass.
+        jnp: table probe OR'd with the jnp stash match — identical answers.
+        """
+        up = ("always" if self.resolve(state.table,
+                                       stash_slots=stash.shape[1])
+              == "pallas" else "never")
+        return kops.filter_lookup(state.table, hi, lo, fp_bits=self.fp_bits,
+                                  n_buckets=state.n_buckets, stash=stash,
+                                  use_pallas=up)
+
+    def insert_spill(self, state: jfilter.FilterState, stash: jax.Array,
+                     hi: jax.Array, lo: jax.Array,
+                     valid: Optional[jax.Array] = None
+                     ) -> tuple[jfilter.FilterState, jax.Array, jax.Array]:
+        """Bulk insert that spills overflow to the stash
+        -> (state, stash, ok[N]).
+
+        ``ok`` goes False only when table eviction budget AND stash are both
+        exhausted — the streaming layer answers that with a generation
+        rotation instead of the OCF's grow+rebuild.  ``state.count`` tracks
+        table-resident fingerprints only; stashed entries are counted by
+        ``kops.stash_occupancy`` so occupancy math stays honest.
+        """
+        spilled_before = kops.stash_occupancy(stash)
+        up = ("always" if self.resolve(state.table,
+                                       stash_slots=stash.shape[1])
+              == "pallas" else "never")
+        table, new_stash, ok = kops.filter_insert(
+            state.table, hi, lo, fp_bits=self.fp_bits,
+            n_buckets=state.n_buckets, valid=valid,
+            evict_rounds=self.evict_rounds, stash=stash,
+            max_disp=self.max_disp, use_pallas=up)
+        newly_stashed = kops.stash_occupancy(new_stash) - spilled_before
+        count = state.count + jnp.sum(ok, dtype=jnp.int32) - newly_stashed
+        return jfilter.FilterState(table, count, state.n_buckets), \
+            new_stash, ok
 
     def delete(self, state: jfilter.FilterState, hi: jax.Array,
                lo: jax.Array, valid: Optional[jax.Array] = None

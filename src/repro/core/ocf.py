@@ -22,19 +22,23 @@ Host-side control plane + backend-dispatched data plane:
 from __future__ import annotations
 
 import dataclasses
-from typing import Literal
+from typing import Literal, Optional
 
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import hashing
-from repro.core.filter_ops import Backend, FilterOps
+from repro.core.chunking import key_chunks, pow2_at_least
+from repro.core.filter_ops import Backend, FilterOps, evict_rounds_for_load
+# Leaf-module import (NOT repro.kernels.ops): core/__init__ runs during the
+# kernel package's own init when an entry point imports kernels first, and
+# ops would be partially initialized here.  kernels/stash.py only needs
+# core.hashing, so it is cycle-safe.
+from repro.kernels.stash import make_stash, stash_occupancy
 from repro.core.keystore import VectorKeystore
 from repro.core.policy import EofPolicy, PrePolicy, ResizeDecision
 from repro.core import filter as jfilter
 
 SNAP_BUCKETS = 256
-CHUNK = 4096
 
 
 @dataclasses.dataclass
@@ -47,7 +51,15 @@ class OcfConfig:
     max_displacements: int = 500
     mode: Literal["PRE", "EOF"] = "EOF"
     backend: Backend = "auto"        # filter data plane: jnp | pallas | auto
-    evict_rounds: int = 32           # pallas insert kernel's eviction budget
+    # Pallas insert kernel's eviction budget.  None (default) derives it
+    # from the configured operating load: evict_rounds_for_load(o_max) —
+    # 32 at the default o_max=0.85, 64 at 0.9.
+    evict_rounds: Optional[int] = None
+    # Overflow-stash slots (0 = no stash, the classic grow-on-failure OCF).
+    # With a stash, eviction-storm inserts park in the stash instead of
+    # triggering an emergency grow+rebuild; the stash is re-derived empty on
+    # every rebuild, which also reclaims entries whose key was deleted.
+    stash_slots: int = 0
     o_max: float = 0.85              # Max Occupancy
     o_min: float = 0.25              # Min Occupancy
     k_min: float = 0.35              # K markers (EOF)
@@ -65,10 +77,12 @@ class OcfConfig:
                          c_max=self.c_max)
 
     def make_filter_ops(self) -> FilterOps:
+        rounds = (self.evict_rounds if self.evict_rounds is not None
+                  else evict_rounds_for_load(self.o_max))
         return FilterOps(fp_bits=self.fp_bits,
                          max_disp=self.max_displacements,
                          backend=self.backend,
-                         evict_rounds=self.evict_rounds)
+                         evict_rounds=rounds)
 
 
 @dataclasses.dataclass
@@ -81,15 +95,9 @@ class OcfStats:
     shrinks: int = 0
     rebuild_keys: int = 0
     failed_inserts: int = 0       # chain exhausted -> emergency grow
+    stash_spills: int = 0         # chain exhausted -> parked in the stash
     blind_deletes_blocked: int = 0
     buffer_reallocs: int = 0      # pow2 buffer growth (recompile events)
-
-
-def _pow2_at_least(n: int) -> int:
-    p = 1
-    while p < n:
-        p <<= 1
-    return p
 
 
 class OCF:
@@ -101,9 +109,11 @@ class OCF:
         self.ops = self.config.make_filter_ops()
         self.keystore = VectorKeystore()
         active = self._snap_buckets(self.config.capacity)
-        buf = _pow2_at_least(active)
+        buf = pow2_at_least(active)
         self.state = jfilter.make_state(active, self.config.bucket_size,
                                         buffer_buckets=buf)
+        self.stash = (make_stash(self.config.stash_slots)
+                      if self.config.stash_slots else None)
         self.stats = OcfStats()
         self.capacity_history: list[int] = [self.capacity]
 
@@ -134,18 +144,7 @@ class OCF:
 
     # ---------------------------------------------------------- chunking --
 
-    @staticmethod
-    def _chunks(keys: np.ndarray):
-        """Yield (hi, lo, valid, n_real) fixed-size CHUNK batches."""
-        for i in range(0, keys.size, CHUNK):
-            part = keys[i:i + CHUNK]
-            n = part.size
-            if n < CHUNK:
-                part = np.pad(part, (0, CHUNK - n))
-            hi, lo = hashing.key_to_u32_pair_np(part)
-            valid = np.zeros(CHUNK, bool)
-            valid[:n] = True
-            yield jnp.asarray(hi), jnp.asarray(lo), jnp.asarray(valid), n
+    _chunks = staticmethod(key_chunks)   # shared contract: core/chunking.py
 
     # ------------------------------------------------------------- ops ---
 
@@ -155,7 +154,11 @@ class OCF:
         out = np.zeros(keys.size, bool)
         off = 0
         for hi, lo, _valid, n in self._chunks(keys):
-            hits = self.ops.lookup(self.state, hi, lo)
+            if self.stash is not None:
+                hits = self.ops.lookup_with_stash(self.state, self.stash,
+                                                  hi, lo)
+            else:
+                hits = self.ops.lookup(self.state, hi, lo)
             out[off:off + n] = np.asarray(hits)[:n]
             off += n
         return out
@@ -169,9 +172,18 @@ class OCF:
         # Queue every chunk on device first; the ok masks are stacked on
         # device and pulled back in ONE host transfer after the whole batch
         # (the seed synced per chunk, serializing on device->host latency).
+        # The stash-spill stat follows the same discipline: occupancy stays
+        # a device scalar until everything is queued.
+        spilled_before = (stash_occupancy(self.stash)
+                          if self.stash is not None else None)
         oks, ns = [], []
         for hi, lo, valid, n in self._chunks(keys):
-            state, ok = self.ops.insert(self.state, hi, lo, valid=valid)
+            if self.stash is not None:
+                state, stash, ok = self.ops.insert_spill(
+                    self.state, self.stash, hi, lo, valid=valid)
+                self.stash = stash
+            else:
+                state, ok = self.ops.insert(self.state, hi, lo, valid=valid)
             self.state = state
             oks.append(ok)
             ns.append(n)
@@ -180,9 +192,13 @@ class OCF:
             ok_all = np.asarray(jnp.stack(oks))
             failed = sum(int((~ok_all[i, :n]).sum())
                          for i, n in enumerate(ns))
+        if self.stash is not None:
+            self.stats.stash_spills += int(
+                stash_occupancy(self.stash) - spilled_before)
         if failed:
-            # Emergency grow + rebuild; the keystore already holds the whole
-            # batch, so the rebuild IS the retry (never double-insert).
+            # Table AND (when configured) stash exhausted: emergency grow +
+            # rebuild; the keystore already holds the whole batch, so the
+            # rebuild IS the retry (never double-insert).
             self.stats.failed_inserts += failed
             self._resize(ResizeDecision(
                 new_capacity=min(self.capacity * 2, self.config.c_max),
@@ -192,7 +208,13 @@ class OCF:
     def delete(self, keys) -> np.ndarray:
         """Verified delete (paper §IV): only keystore-present keys reach the
         filter, so foreign fingerprints are never removed.  The presence
-        check is one vectorized keystore op, not a per-key loop."""
+        check is one vectorized keystore op, not a per-key loop.
+
+        With a stash configured, a key whose fingerprint sits in the stash
+        (not the table) is removed from the keystore but its stash entry
+        lingers as a false positive until the next rebuild re-derives the
+        stash — the standard filter trade (false positives allowed, false
+        negatives never)."""
         keys = np.asarray(keys, dtype=np.uint64)
         self.stats.deletes += keys.size
         present = self.keystore.remove(keys)
@@ -217,15 +239,26 @@ class OCF:
             self._resize(decision)
 
     def _rebuild_into(self, active_buckets: int, buffer_buckets: int) -> bool:
+        """Rebuild from the keystore; the stash (when configured) restarts
+        empty — rebuilding re-homes previously stashed fingerprints into the
+        (larger) table and garbage-collects entries whose key was deleted
+        while stashed."""
         keys = self.keystore.materialize()
         state = jfilter.make_state(active_buckets, self.config.bucket_size,
                                    buffer_buckets=buffer_buckets)
+        stash = (make_stash(self.config.stash_slots)
+                 if self.stash is not None else None)
         ok_all = True
         for hi, lo, valid, n in self._chunks(keys):
-            state, ok = self.ops.insert(state, hi, lo, valid=valid)
+            if stash is not None:
+                state, stash, ok = self.ops.insert_spill(state, stash, hi,
+                                                         lo, valid=valid)
+            else:
+                state, ok = self.ops.insert(state, hi, lo, valid=valid)
             ok_all = ok_all and bool(np.asarray(ok)[:n].all())
         if ok_all:
             self.state = state
+            self.stash = stash
             self.stats.rebuild_keys += keys.size
         return ok_all
 
@@ -238,13 +271,13 @@ class OCF:
         # drops below a quarter of it (reclaim memory); pow2 keeps the jit
         # cache to O(log range) entries.
         if new_active > buf or new_active * 4 < buf:
-            buf = _pow2_at_least(new_active)
+            buf = pow2_at_least(new_active)
             self.stats.buffer_reallocs += 1
-        while not self._rebuild_into(new_active, max(buf, _pow2_at_least(
+        while not self._rebuild_into(new_active, max(buf, pow2_at_least(
                 new_active))):
             # Shrink too tight even after clamping: grow until it fits.
             new_active *= 2
-            buf = _pow2_at_least(new_active)
+            buf = pow2_at_least(new_active)
         self.stats.resizes += 1
         if decision.reason == "grow":
             self.stats.grows += 1

@@ -4,3 +4,4 @@ from repro.kernels.fingerprint import fingerprint_hash
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.insert import insert_once
 from repro.kernels.probe import probe
+from repro.kernels.stash import make_stash, stash_occupancy

@@ -12,9 +12,17 @@ does:
      (kick a victim, take its slot, chase the victim to its alternate
      bucket) — the bounded-multi-round optimistic schedule Cuckoo-GPU-style
      accelerator filters use instead of pointer-chasing chains;
-  3. per-lane rollback for chains that did not finish inside the budget, so
-     a failed insert NEVER orphans a resident fingerprint (the same
-     transactional guarantee as ``pyfilter.PyCuckooFilter.insert``).
+  3. an optional **overflow-stash spill** (``kernels/stash.py``): lanes whose
+     chain exhausts the budget park their carried fingerprint in a small
+     device-resident stash instead of failing — every committed kick stays,
+     the final victim lands in the stash, and the lane reports success.  The
+     probe kernel checks the stash in the same fused pass, so the spill is
+     invisible to lookups.  This is what cuts the worst-case insert latency
+     at high load: the rollback + grow + rebuild cliff becomes an O(1) park;
+  4. per-lane rollback for chains that did not finish inside the budget AND
+     found no stash slot (or when no stash is attached), so a failed insert
+     NEVER orphans a resident fingerprint (the same transactional guarantee
+     as ``pyfilter.PyCuckooFilter.insert``).
 
 Schedule:
   * the table (the OCF's pow2 buffer) is block-resident in VMEM and aliased
@@ -57,6 +65,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import hashing
 from repro.kernels.rank import rank_among_earlier
+from repro.kernels.stash import stash_spill
 
 DEFAULT_BLOCK = 1024
 # Bounded eviction budget.  The loop is a while_loop that exits as soon as
@@ -89,7 +98,8 @@ def _place_round(table, target, active, fp):
     return table, fits
 
 
-def _evict_rounds(table, fp, start_bucket, residue, n_buckets, rounds: int):
+def _evict_rounds(table, fp, start_bucket, residue, n_buckets, rounds: int,
+                  stash=None):
     """Bounded device-side eviction rounds for the contended residue.
 
     Each residual lane carries a fingerprint (initially its own; after a
@@ -102,9 +112,16 @@ def _evict_rounds(table, fp, start_bucket, residue, n_buckets, rounds: int):
                 ``steps % bucket_size``), takes the victim, and chases it to
                 the victim's alternate bucket.
 
-    Lanes still carrying after ``rounds`` roll their kicks back in reverse
-    (restoring every victim to its original slot) and report failure.
-    Returns (table, completed bool[N]).
+    Lanes still carrying after ``rounds`` first try to **spill** their
+    carried fingerprint into the overflow stash (when one is attached): the
+    chain's kicks all stay committed, only the final victim parks in the
+    stash, and the lane completes.  The carried lane's current bucket is
+    always one of the carried fingerprint's two candidate buckets (chains
+    move via the alternate-index involution), which is exactly the identity
+    ``stash_match`` probes against.  Lanes that miss the stash too (or when
+    ``stash is None``) roll their kicks back in reverse — restoring every
+    victim to its original slot — and report failure.
+    Returns (table, completed bool[N]) or (table, stash, completed).
     """
     buf, bucket_size = table.shape
     n = fp.shape[0]
@@ -166,8 +183,15 @@ def _evict_rounds(table, fp, start_bucket, residue, n_buckets, rounds: int):
             jnp.zeros((n, rounds), jnp.int32),
             jnp.zeros((n, rounds), jnp.int32),
             jnp.zeros((n, rounds), jnp.uint32))
-    (_r, table, _dirty, carried, _bucket, active, steps, hb, hs,
+    (_r, table, _dirty, carried, bucket, active, steps, hb, hs,
      hw) = jax.lax.while_loop(round_cond, round_body, init)
+
+    # Spill: exhausted lanes park their carried fp in the stash (chain kicks
+    # stay committed — only the final victim moves off-table), completing
+    # without rollback.  Lane order decides who wins the last free slots.
+    if stash is not None:
+        stash, spilled = stash_spill(stash, carried, bucket, active)
+        active = active & ~spilled
 
     # Rollback: lanes still carrying restore their kicks newest-first; the
     # dirty discipline above makes every restored slot exclusively theirs.
@@ -190,17 +214,14 @@ def _evict_rounds(table, fp, start_bucket, residue, n_buckets, rounds: int):
         jnp.any(failed),
         lambda tc: jax.lax.fori_loop(0, rounds, rb_body, tc),
         lambda tc: tc, (table, carried))
+    if stash is not None:
+        return table, stash, residue & ~failed
     return table, residue & ~failed
 
 
-def _insert_kernel(n_ref, table_in_ref, hi_ref, lo_ref, valid_ref, table_ref,
-                   ok_ref, *, fp_bits: int, evict_rounds: int):
-    del table_in_ref  # aliased to table_ref (the output) — read/write there
-    n_buckets = n_ref[0, 0]
-    table = table_ref[...]
-    hi = hi_ref[...]
-    lo = lo_ref[...]
-    valid = valid_ref[...]
+def _insert_body(table, stash, hi, lo, valid, n_buckets, *, fp_bits: int,
+                 evict_rounds: int):
+    """Optimistic rounds + eviction rounds (+ stash spill) on loaded values."""
     fp = hashing.fingerprint(hi, lo, fp_bits)
     i1 = hashing.index_hash_dyn(hi, lo, n_buckets).astype(jnp.int32)
     i2 = hashing.alt_index_dyn(i1, fp, n_buckets).astype(jnp.int32)
@@ -209,10 +230,43 @@ def _insert_kernel(n_ref, table_in_ref, hi_ref, lo_ref, valid_ref, table_ref,
     ok = ok1 | ok2
     if evict_rounds > 0:
         # Chains start at the alternate bucket, matching the sequential path.
-        table, completed = _evict_rounds(table, fp, i2, valid & ~ok,
-                                         n_buckets, evict_rounds)
+        if stash is None:
+            table, completed = _evict_rounds(table, fp, i2, valid & ~ok,
+                                             n_buckets, evict_rounds)
+        else:
+            table, stash, completed = _evict_rounds(
+                table, fp, i2, valid & ~ok, n_buckets, evict_rounds,
+                stash=stash)
         ok = ok | completed
+    elif stash is not None:
+        # No eviction budget at all: the optimistic residue spills straight
+        # to the stash (bound for its alternate bucket, where a chain would
+        # have started).
+        stash, spilled = stash_spill(stash, fp, i2, valid & ~ok)
+        ok = ok | spilled
+    return table, stash, ok
+
+
+def _insert_kernel(n_ref, table_in_ref, hi_ref, lo_ref, valid_ref, table_ref,
+                   ok_ref, *, fp_bits: int, evict_rounds: int):
+    del table_in_ref  # aliased to table_ref (the output) — read/write there
+    table, _stash, ok = _insert_body(
+        table_ref[...], None, hi_ref[...], lo_ref[...], valid_ref[...],
+        n_ref[0, 0], fp_bits=fp_bits, evict_rounds=evict_rounds)
     table_ref[...] = table
+    ok_ref[...] = ok
+
+
+def _insert_stash_kernel(n_ref, table_in_ref, stash_in_ref, hi_ref, lo_ref,
+                         valid_ref, table_ref, stash_ref, ok_ref, *,
+                         fp_bits: int, evict_rounds: int):
+    del table_in_ref, stash_in_ref  # aliased to the outputs — read/write there
+    table, stash, ok = _insert_body(
+        table_ref[...], stash_ref[...], hi_ref[...], lo_ref[...],
+        valid_ref[...], n_ref[0, 0], fp_bits=fp_bits,
+        evict_rounds=evict_rounds)
+    table_ref[...] = table
+    stash_ref[...] = stash
     ok_ref[...] = ok
 
 
@@ -220,18 +274,21 @@ def _insert_kernel(n_ref, table_in_ref, hi_ref, lo_ref, valid_ref, table_ref,
                                              "block", "interpret"))
 def insert_bulk(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
                 fp_bits: int, n_buckets=None, valid=None,
-                evict_rounds: int = DEFAULT_EVICT_ROUNDS,
-                block: int = DEFAULT_BLOCK, interpret: bool = True
-                ) -> tuple[jax.Array, jax.Array]:
+                evict_rounds: int = DEFAULT_EVICT_ROUNDS, stash=None,
+                block: int = DEFAULT_BLOCK, interpret: bool = True):
     """Full bulk insert (optimistic rounds + bounded eviction rounds)
-    -> (new_table, placed bool[N]).
+    -> (new_table, placed bool[N]), or (new_table, new_stash, placed) when
+    an overflow ``stash`` (``kernels.stash.make_stash``) is attached.
 
     N must be a block multiple (ops.py pads).  ``n_buckets`` is the ACTIVE
     bucket count (may be < ``table.shape[0]`` for the OCF's pow2 buffer).
     Lanes with ``valid=False`` never touch the table.  ``evict_rounds=0``
     degenerates to the PR-1 optimistic-only kernel (``insert_once``).
-    Lanes whose chain exceeds the round budget roll back and report False —
-    the control plane treats that exactly like a full filter (grow+rebuild).
+    Without a stash, lanes whose chain exceeds the round budget roll back
+    and report False — the control plane treats that exactly like a full
+    filter (grow+rebuild).  With a stash, those lanes spill their carried
+    fingerprint into it (aliased in→out like the table, so grid blocks
+    accumulate) and only roll back once the stash is full too.
     """
     n = hi.shape[0]
     block = min(block, n)
@@ -247,18 +304,37 @@ def insert_bulk(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
                              memory_space=pltpu.SMEM)
     key_spec = pl.BlockSpec((block,), lambda i: (i,))
     table_spec = pl.BlockSpec((buffer_buckets, bucket_size), lambda i: (0, 0))
-    new_table, ok = pl.pallas_call(
-        functools.partial(_insert_kernel, fp_bits=fp_bits,
+    ok_spec = pl.BlockSpec((block,), lambda i: (i,))
+    if stash is None:
+        new_table, ok = pl.pallas_call(
+            functools.partial(_insert_kernel, fp_bits=fp_bits,
+                              evict_rounds=evict_rounds),
+            grid=grid,
+            in_specs=[smem_spec, table_spec, key_spec, key_spec, key_spec],
+            out_specs=[table_spec, ok_spec],
+            out_shape=[jax.ShapeDtypeStruct(table.shape, table.dtype),
+                       jax.ShapeDtypeStruct((n,), jnp.bool_)],
+            input_output_aliases={1: 0},  # table updates in place across steps
+            interpret=interpret,
+        )(n_arr, table, hi.astype(jnp.uint32), lo.astype(jnp.uint32), valid)
+        return new_table, ok
+    stash_spec = pl.BlockSpec(stash.shape, lambda i: (0, 0))
+    new_table, new_stash, ok = pl.pallas_call(
+        functools.partial(_insert_stash_kernel, fp_bits=fp_bits,
                           evict_rounds=evict_rounds),
         grid=grid,
-        in_specs=[smem_spec, table_spec, key_spec, key_spec, key_spec],
-        out_specs=[table_spec, pl.BlockSpec((block,), lambda i: (i,))],
+        in_specs=[smem_spec, table_spec, stash_spec, key_spec, key_spec,
+                  key_spec],
+        out_specs=[table_spec, stash_spec, ok_spec],
         out_shape=[jax.ShapeDtypeStruct(table.shape, table.dtype),
+                   jax.ShapeDtypeStruct(stash.shape, stash.dtype),
                    jax.ShapeDtypeStruct((n,), jnp.bool_)],
-        input_output_aliases={1: 0},   # table updates in place across steps
+        # table and stash update in place across grid steps
+        input_output_aliases={1: 0, 2: 1},
         interpret=interpret,
-    )(n_arr, table, hi.astype(jnp.uint32), lo.astype(jnp.uint32), valid)
-    return new_table, ok
+    )(n_arr, table, stash, hi.astype(jnp.uint32), lo.astype(jnp.uint32),
+      valid)
+    return new_table, new_stash, ok
 
 
 def insert_once(table: jax.Array, hi: jax.Array, lo: jax.Array, *,

@@ -22,6 +22,9 @@ from repro.kernels.fingerprint import fingerprint_hash
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.insert import DEFAULT_EVICT_ROUNDS, insert_bulk, insert_once
 from repro.kernels.probe import probe
+from repro.kernels.stash import (DEFAULT_STASH_SLOTS, make_stash,
+                                 stash_occupancy, stash_probe_ref,
+                                 stash_spill_ref)
 
 # VMEM residency budget for the filter kernels.  The probe/insert/delete
 # BlockSpecs pin the full table per program, and the mutating kernels carry
@@ -44,7 +47,7 @@ RANK_BYTES_PER_ELEM = 4
 
 
 def kernel_vmem_bytes(op: str, *, table_bytes: int, block: int,
-                      evict_rounds: int = 0) -> int:
+                      evict_rounds: int = 0, stash_slots: int = 0) -> int:
     """Estimated peak VMEM footprint of one filter-kernel program.
 
     Used by 'auto' dispatch so budgeting reflects what each kernel actually
@@ -55,15 +58,20 @@ def kernel_vmem_bytes(op: str, *, table_bytes: int, block: int,
       * insert — the table twice over (the dirty bitmap rides at table
         shape), the rank working set, and the 3 per-lane eviction-history
         arrays of width ``evict_rounds``.
+    ``stash_slots`` adds the overflow stash's footprint: the aliased
+    uint32[2, S] block plus the [block, S] broadcast-compare mask the match
+    (probe) / spill (insert) step materializes.
     """
     rank_bytes = RANK_BYTES_PER_ELEM * block * block
+    stash_bytes = 8 * stash_slots + block * stash_slots if stash_slots else 0
     if op == "probe":
-        return table_bytes + 16 * block
+        return table_bytes + 16 * block + stash_bytes
     if op == "delete":
         return table_bytes + rank_bytes + 16 * block
     if op == "insert":
         return (2 * table_bytes + rank_bytes
-                + 3 * 4 * block * max(evict_rounds, 1) + 16 * block)
+                + 3 * 4 * block * max(evict_rounds, 1) + 16 * block
+                + stash_bytes)
     raise ValueError(f"unknown filter kernel op {op!r}")
 
 
@@ -111,71 +119,106 @@ def hash_keys(hi: jax.Array, lo: jax.Array, *, fp_bits: int, n_buckets: int,
 
 
 def filter_lookup(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
-                  fp_bits: int, n_buckets=None,
+                  fp_bits: int, n_buckets=None, stash=None,
                   use_pallas: str = "auto") -> jax.Array:
     """Bulk membership via the fused probe kernel.
 
     ``n_buckets``: ACTIVE bucket count when ``table`` is a pow2 buffer
     larger than the live filter (the OCF state); defaults to the full table.
+    ``stash``: optional overflow stash — checked inside the same kernel pass
+    (or by the jnp ``stash_probe_ref`` on the non-kernel arm), so stashed
+    fingerprints answer True exactly like resident ones.
     """
     if hi.shape[0] == 0:
         return jnp.zeros((0,), jnp.bool_)
     block = 1024 if hi.shape[0] >= 1024 else hi.shape[0]
+    stash_slots = 0 if stash is None else stash.shape[1]
     if not _use_kernel(use_pallas,
                        vmem_bytes=kernel_vmem_bytes(
-                           "probe", table_bytes=table.size * 4, block=block),
+                           "probe", table_bytes=table.size * 4, block=block,
+                           stash_slots=stash_slots),
                        n_keys=hi.shape[0]):
-        return ref.probe_ref(table, hi, lo, fp_bits=fp_bits,
-                             n_buckets=n_buckets)
+        hit = ref.probe_ref(table, hi, lo, fp_bits=fp_bits,
+                            n_buckets=n_buckets)
+        if stash is not None:
+            nb = table.shape[0] if n_buckets is None else n_buckets
+            hit = hit | stash_probe_ref(stash, hi, lo, fp_bits=fp_bits,
+                                        n_buckets=nb)
+        return hit
     hi_p, n = _pad_to(hi, block)
     lo_p, _ = _pad_to(lo, block)
     hit = probe(table, hi_p, lo_p, fp_bits=fp_bits, n_buckets=n_buckets,
-                block=block, interpret=not _on_tpu())
+                stash=stash, block=block, interpret=not _on_tpu())
     return hit[:n]
 
 
 def filter_insert(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
                   fp_bits: int, n_buckets=None, valid=None,
-                  evict_rounds: int = 0, use_pallas: str = "auto"
-                  ) -> tuple[jax.Array, jax.Array]:
-    """Fused bulk insert -> (new_table, placed bool[N]).
+                  evict_rounds: int = 0, stash=None, max_disp: int = 500,
+                  use_pallas: str = "auto"):
+    """Fused bulk insert -> (new_table, placed bool[N]), or
+    (new_table, new_stash, placed) when an overflow ``stash`` is attached.
 
     With ``evict_rounds=0`` this is the PR-1 optimistic single round — the
     fast path for ~95% of a batch, with the caller sweeping the residue.
     With ``evict_rounds>0`` the contended residue is resolved by bounded
     device-side eviction rounds inside the same kernel pass, so the WHOLE
     insert stays on-device (``core.filter_ops.FilterOps.insert``); lanes
-    whose chain exceeds the budget roll back losslessly and report False.
+    whose chain exceeds the budget spill to the stash when one is attached,
+    and only roll back losslessly and report False once the stash is full
+    (or when no stash is attached).
 
     The non-kernel fallback keeps exact scan semantics: optimistic jnp round
-    plus the ``lax.scan`` eviction path over the residue.
+    plus the ``lax.scan`` eviction path over the residue (its sequential
+    chains bounded by ``max_disp``, the jnp backend's knob); its spill parks
+    the *key's own* fingerprint (the scan rolls exhausted chains back),
+    while the kernel parks the chain's final carried victim — the two arms
+    agree on which lanes succeed and on membership, not on which
+    fingerprint of an exhausted chain physically sits in the stash.
     """
     if hi.shape[0] == 0:
-        return table, jnp.zeros((0,), jnp.bool_)
+        empty_ok = jnp.zeros((0,), jnp.bool_)
+        return (table, empty_ok) if stash is None else (table, stash,
+                                                        empty_ok)
     if valid is None:
         valid = jnp.ones(hi.shape, bool)
     block = 1024 if hi.shape[0] >= 1024 else hi.shape[0]
+    stash_slots = 0 if stash is None else stash.shape[1]
     if not _use_kernel(use_pallas,
                        vmem_bytes=kernel_vmem_bytes(
                            "insert", table_bytes=table.size * 4, block=block,
-                           evict_rounds=evict_rounds),
+                           evict_rounds=evict_rounds,
+                           stash_slots=stash_slots),
                        n_keys=hi.shape[0]):
         table, placed = ref.insert_once_ref(table, hi, lo, fp_bits=fp_bits,
                                             n_buckets=n_buckets, valid=valid)
-        if evict_rounds == 0:
+        if evict_rounds > 0:
+            table, ok2 = ref.insert_residue_ref(table, hi, lo,
+                                                fp_bits=fp_bits,
+                                                n_buckets=n_buckets,
+                                                valid=valid & ~placed,
+                                                max_disp=max_disp)
+            placed = placed | ok2
+        if stash is None:
             return table, placed
-        table, ok2 = ref.insert_residue_ref(table, hi, lo, fp_bits=fp_bits,
-                                            n_buckets=n_buckets,
-                                            valid=valid & ~placed)
-        return table, placed | ok2
+        nb = table.shape[0] if n_buckets is None else n_buckets
+        stash, spilled = stash_spill_ref(stash, hi, lo, valid & ~placed,
+                                         fp_bits=fp_bits, n_buckets=nb)
+        return table, stash, placed | spilled
     hi_p, n = _pad_to(hi, block)
     lo_p, _ = _pad_to(lo, block)
     valid_p, _ = _pad_to(valid, block)   # pads False: never touches the table
-    new_table, ok = insert_bulk(table, hi_p, lo_p, fp_bits=fp_bits,
-                                n_buckets=n_buckets, valid=valid_p,
-                                evict_rounds=evict_rounds,
-                                block=block, interpret=not _on_tpu())
-    return new_table, ok[:n]
+    if stash is None:
+        new_table, ok = insert_bulk(table, hi_p, lo_p, fp_bits=fp_bits,
+                                    n_buckets=n_buckets, valid=valid_p,
+                                    evict_rounds=evict_rounds,
+                                    block=block, interpret=not _on_tpu())
+        return new_table, ok[:n]
+    new_table, new_stash, ok = insert_bulk(
+        table, hi_p, lo_p, fp_bits=fp_bits, n_buckets=n_buckets,
+        valid=valid_p, evict_rounds=evict_rounds, stash=stash, block=block,
+        interpret=not _on_tpu())
+    return new_table, new_stash, ok[:n]
 
 
 def filter_delete(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
@@ -240,4 +283,5 @@ __all__ = ["hash_keys", "filter_lookup", "filter_insert", "filter_delete",
            "attention", "fingerprint_hash", "probe", "insert_once",
            "insert_bulk", "delete_bulk", "flash_attention",
            "kernel_vmem_bytes", "VMEM_TABLE_BUDGET",
-           "DEFAULT_EVICT_ROUNDS"]
+           "DEFAULT_EVICT_ROUNDS", "DEFAULT_STASH_SLOTS", "make_stash",
+           "stash_occupancy"]

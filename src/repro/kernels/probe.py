@@ -12,7 +12,12 @@ Layout strategy (TPU adaptation of the paper's pointer-chasing lookup):
   * keys are tiled ``(BLOCK,)`` over a 1-D grid, hashing is fused so a key is
     read once from HBM and never revisited;
   * both candidate buckets are gathered from VMEM and compared per lane —
-    2·bucket_size uint32 compares per key on the VPU, no MXU involvement.
+    2·bucket_size uint32 compares per key on the VPU, no MXU involvement;
+  * with an overflow stash attached (``kernels/stash.py``), the same pass
+    also broadcast-compares each lane against the stash — a stashed
+    fingerprint (spilled by the insert kernel when an eviction chain
+    exhausted its budget) answers True exactly like a resident one, so the
+    stash is invisible to every lookup consumer.
 
 The hash math is imported from ``repro.core.hashing`` — one spec shared by
 the host data plane, the numpy oracle, and every kernel.
@@ -27,32 +32,45 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import hashing
+from repro.kernels.stash import stash_match
 
 DEFAULT_BLOCK = 1024
 
 
-def _probe_kernel(n_ref, table_ref, hi_ref, lo_ref, hit_ref, *, fp_bits: int):
-    n_buckets = n_ref[0, 0]
-    hi = hi_ref[...]
-    lo = lo_ref[...]
+def _probe_body(table_ref, stash, hi, lo, n_buckets, *, fp_bits: int):
     fp = hashing.fingerprint(hi, lo, fp_bits)
     i1 = hashing.index_hash_dyn(hi, lo, n_buckets)
     i2 = hashing.alt_index_dyn(i1, fp, n_buckets)
     b1 = table_ref[i1.astype(jnp.int32), :]   # [BLOCK, bucket_size] VMEM gather
     b2 = table_ref[i2.astype(jnp.int32), :]
     hit = jnp.any(b1 == fp[:, None], axis=-1) | jnp.any(b2 == fp[:, None], axis=-1)
-    hit_ref[...] = hit
+    if stash is not None:
+        hit = hit | stash_match(stash, fp, i1, i2)
+    return hit
+
+
+def _probe_kernel(n_ref, table_ref, hi_ref, lo_ref, hit_ref, *, fp_bits: int):
+    hit_ref[...] = _probe_body(table_ref, None, hi_ref[...], lo_ref[...],
+                               n_ref[0, 0], fp_bits=fp_bits)
+
+
+def _probe_stash_kernel(n_ref, table_ref, stash_ref, hi_ref, lo_ref, hit_ref,
+                        *, fp_bits: int):
+    hit_ref[...] = _probe_body(table_ref, stash_ref[...], hi_ref[...],
+                               lo_ref[...], n_ref[0, 0], fp_bits=fp_bits)
 
 
 @functools.partial(jax.jit, static_argnames=("fp_bits", "block", "interpret"))
 def probe(table: jax.Array, hi: jax.Array, lo: jax.Array, *, fp_bits: int,
-          n_buckets=None, block: int = DEFAULT_BLOCK,
+          n_buckets=None, stash=None, block: int = DEFAULT_BLOCK,
           interpret: bool = True) -> jax.Array:
     """Bulk membership test -> bool[N].  N must be a block multiple.
 
     ``n_buckets``: ACTIVE bucket count (int or traced scalar); defaults to
     the full table, i.e. buffer == active.  May be less than
     ``table.shape[0]`` when the table is the OCF's preallocated pow2 buffer.
+    ``stash``: optional overflow stash (``kernels.stash``) checked in the
+    same fused pass.
     """
     n = hi.shape[0]
     block = min(block, n)
@@ -66,11 +84,23 @@ def probe(table: jax.Array, hi: jax.Array, lo: jax.Array, *, fp_bits: int,
                              memory_space=pltpu.SMEM)
     key_spec = pl.BlockSpec((block,), lambda i: (i,))
     table_spec = pl.BlockSpec((buffer_buckets, bucket_size), lambda i: (0, 0))
+    out_spec = pl.BlockSpec((block,), lambda i: (i,))
+    out_shape = jax.ShapeDtypeStruct((n,), jnp.bool_)
+    if stash is None:
+        return pl.pallas_call(
+            functools.partial(_probe_kernel, fp_bits=fp_bits),
+            grid=grid,
+            in_specs=[smem_spec, table_spec, key_spec, key_spec],
+            out_specs=out_spec,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(n_arr, table, hi.astype(jnp.uint32), lo.astype(jnp.uint32))
+    stash_spec = pl.BlockSpec(stash.shape, lambda i: (0, 0))
     return pl.pallas_call(
-        functools.partial(_probe_kernel, fp_bits=fp_bits),
+        functools.partial(_probe_stash_kernel, fp_bits=fp_bits),
         grid=grid,
-        in_specs=[smem_spec, table_spec, key_spec, key_spec],
-        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((n,), jnp.bool_),
+        in_specs=[smem_spec, table_spec, stash_spec, key_spec, key_spec],
+        out_specs=out_spec,
+        out_shape=out_shape,
         interpret=interpret,
-    )(n_arr, table, hi.astype(jnp.uint32), lo.astype(jnp.uint32))
+    )(n_arr, table, stash, hi.astype(jnp.uint32), lo.astype(jnp.uint32))

@@ -1,0 +1,120 @@
+"""Device-resident overflow stash — shared math for the filter kernels.
+
+The stash is the burst-tolerance escape hatch for the insert hot path: when a
+lane's bounded eviction chain exhausts its round budget, the insert kernel
+spills the lane's *carried* fingerprint into a small fixed-size stash instead
+of rolling the whole chain back and failing (the Kirsch–Mitzenmacher–Wieder
+constant-size-stash result for cuckoo hashing, and the same overflow-absorbing
+role the adaptive-cuckoo-filter literature gives its cellar).  The probe
+kernel checks the stash in the same fused pass, so a stashed key is
+indistinguishable from a resident one to every consumer.
+
+Layout: ``uint32[2, STASH_SLOTS]`` —
+
+  * row 0: fingerprints (0 == EMPTY; real fingerprints are never 0, the hash
+    remaps them to 1);
+  * row 1: the bucket the entry was bound for when it was stashed.
+
+Because the alternate index is an involution (``alt(alt(b, fp), fp) == b``),
+whichever bucket of the pair a chain happened to hold at exhaustion
+identifies the pair: a probe matches a stash entry when the fingerprints
+agree AND the stored bucket is either of the probe's two candidate buckets.
+That makes the stash insensitive to *which* victim of a chain got spilled.
+
+Everything here is pure jnp on purpose: the same three functions run inside
+the Pallas kernels (``kernels/insert.py`` / ``kernels/probe.py``), on the
+jnp dispatch arm (``kernels/ops.py``), and as the test reference — one
+definition, zero parity surface.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashing
+
+# Default stash capacity.  The stash absorbs chain-budget overflows, whose
+# count at a fixed load is O(batch residue), not O(table) — 128 slots rides
+# out the 0.9-load eviction storms the tests throw while costing 1 KB of
+# VMEM.  Streaming callers size it per generation (streaming/stash.py).
+DEFAULT_STASH_SLOTS = 128
+
+
+def make_stash(slots: int = DEFAULT_STASH_SLOTS) -> jax.Array:
+    """Fresh empty stash: uint32[2, slots] of zeros."""
+    assert slots > 0, "a stash needs at least one slot"
+    return jnp.zeros((2, slots), dtype=jnp.uint32)
+
+
+def stash_occupancy(stash: jax.Array) -> jax.Array:
+    """Live entry count -> int32[] (device scalar)."""
+    return jnp.sum(stash[0] != 0, dtype=jnp.int32)
+
+
+def stash_match(stash: jax.Array, fp: jax.Array, i1: jax.Array,
+                i2: jax.Array) -> jax.Array:
+    """Membership of (fp, {i1, i2}) batches against the stash -> bool[N].
+
+    One ``[N, STASH_SLOTS]`` broadcast-compare on the VPU — the stash-side
+    counterpart of the probe kernel's bucket compare.  Empty slots hold
+    fp == 0, which no real fingerprint equals, so they never match.
+    """
+    s_fp = stash[0][None, :]
+    s_bkt = stash[1][None, :]
+    i1 = i1.astype(jnp.uint32)[:, None]
+    i2 = i2.astype(jnp.uint32)[:, None]
+    hit = (s_fp == fp[:, None]) & ((s_bkt == i1) | (s_bkt == i2))
+    return jnp.any(hit, axis=1)
+
+
+def stash_spill(stash: jax.Array, carried: jax.Array, bucket: jax.Array,
+                want: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Spill ``want`` lanes' (carried fp, bucket) into free stash slots.
+
+    Lanes are ranked in lane order (earlier lane wins — the same discipline
+    as the placement rounds) and lane i takes the rank-th empty slot; lanes
+    whose rank exceeds the free-slot count miss and must fall back to the
+    caller's failure path (rollback, in the insert kernel).  Returns
+    (new_stash, spilled bool[N]).
+    """
+    s_fp, s_bkt = stash[0], stash[1]
+    slots = s_fp.shape[0]
+    empty = s_fp == 0
+    n_free = jnp.sum(empty, dtype=jnp.int32)
+    rank = jnp.cumsum(want.astype(jnp.int32)) - 1
+    fits = want & (rank < n_free)
+    empty_pos = jnp.cumsum(empty.astype(jnp.int32)) - 1
+    is_dest = empty[None, :] & (empty_pos[None, :] == rank[:, None])
+    slot = jnp.argmax(is_dest, axis=1)
+    upd = jnp.where(fits, slot, slots)                    # OOB -> dropped
+    s_fp = s_fp.at[upd].set(carried.astype(jnp.uint32), mode="drop")
+    s_bkt = s_bkt.at[upd].set(bucket.astype(jnp.uint32), mode="drop")
+    return jnp.concatenate([s_fp[None, :], s_bkt[None, :]], axis=0), fits
+
+
+def stash_probe_ref(stash: jax.Array, hi: jax.Array, lo: jax.Array, *,
+                    fp_bits: int, n_buckets) -> jax.Array:
+    """Hash a key batch and match it against the stash (jnp reference arm)."""
+    fp = hashing.fingerprint(hi, lo, fp_bits)
+    i1 = hashing.index_hash_dyn(hi, lo, n_buckets)
+    i2 = hashing.alt_index_dyn(i1, fp, n_buckets)
+    return stash_match(stash, fp, i1, i2)
+
+
+def stash_spill_ref(stash: jax.Array, hi: jax.Array, lo: jax.Array,
+                    want: jax.Array, *, fp_bits: int, n_buckets
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Spill whole keys (fp bound for the alternate bucket) — jnp arm.
+
+    The scan fallback rolls an exhausted chain back, so the key itself (not
+    a mid-chain victim) is what overflows; it is stashed against its
+    alternate bucket, which is where the sequential chain starts.  The two
+    dispatch arms therefore agree on *which lanes succeed* and on
+    membership, though not necessarily on which fingerprint of a contended
+    chain physically sits in the stash (same caveat as the multi-lane
+    eviction schedule itself).
+    """
+    fp = hashing.fingerprint(hi, lo, fp_bits)
+    i1 = hashing.index_hash_dyn(hi, lo, n_buckets)
+    i2 = hashing.alt_index_dyn(i1, fp, n_buckets)
+    return stash_spill(stash, fp, i2, want)

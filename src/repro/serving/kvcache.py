@@ -22,6 +22,7 @@ import numpy as np
 
 from repro.core.hashing import murmur3_mix_np, splitmix32_np
 from repro.core.ocf import OCF, OcfConfig
+from repro.streaming.generations import GenerationConfig, GenerationalFilter
 
 
 def block_hashes(tokens: np.ndarray, block: int = 64) -> np.ndarray:
@@ -113,6 +114,87 @@ class PrefixCacheIndex:
         self._lru = [k for k in self._lru if k not in lru_set]
         self.stats.evicted += int(ok.sum())
         return int(ok.sum())
+
+    @property
+    def hit_rate(self) -> float:
+        tot = self.stats.block_hits + self.stats.block_misses
+        return self.stats.block_hits / tot if tot else 0.0
+
+
+class GenerationalPrefixIndex:
+    """Prefix-cache index over TTL-aged filter generations (streaming).
+
+    Same duck API as ``PrefixCacheIndex`` (``match_prefix`` / ``admit`` /
+    ``evict`` / ``hit_rate``) but backed by ``repro.streaming``'s
+    ``GenerationalFilter`` instead of a single OCF: admitted prefix blocks
+    land in the active generation, lookups probe every live generation plus
+    the overflow stashes in one fused device call, and **freshness replaces
+    the LRU delete loop** — stale blocks age out when their generation's
+    TTL expires or the ring rotates past them, an O(1) retirement instead
+    of per-key deletes.  ``evict`` is therefore a no-op (sequence eviction
+    is generation retirement), and the page-table layer must treat the
+    index as advisory — exactly the filter contract (false positives
+    possible, false negatives never, within the freshness window).
+    """
+
+    def __init__(self, block: int = 64, *,
+                 config: Optional[GenerationConfig] = None,
+                 backend: Optional[str] = None, ttl: Optional[float] = None,
+                 generations: int = 4, capacity: int = 4096,
+                 now: Optional[float] = None):
+        """``now`` is the stream epoch — pass it (and every later ``now``)
+        when driving TTLs on a logical clock; omit all of them for wall
+        time (one clock domain, like ``GenerationalFilter``)."""
+        self.block = block
+        if config is None:
+            config = GenerationConfig(
+                generations=generations, capacity=capacity, ttl=ttl,
+                backend=backend if backend is not None else "auto")
+        self.filt = GenerationalFilter(config, now=now)
+        self.stats = PrefixStats()
+
+    def match_prefix(self, tokens: np.ndarray,
+                     now: Optional[float] = None) -> int:
+        """Longest cached prefix in *tokens*, in complete blocks.
+
+        Matched blocks resident only in an *aging* generation are promoted
+        (re-inserted into the active one) — the multi-level promote-on-read
+        step, without which a continuously-hot prefix would still age out
+        after K rotations and force a periodic full recompute.
+        """
+        keys = block_hashes(tokens, self.block)
+        self.stats.queries += 1
+        if keys.size == 0:
+            return 0
+        hits = self.filt.lookup(keys, now=now)
+        n = 0
+        while n < len(hits) and hits[n]:
+            n += 1
+        if n:
+            hot = keys[:n]
+            in_active = self.filt.lookup_active(hot, now=now)
+            if not in_active.all():
+                self.filt.insert(hot[~in_active], now=now)
+        self.stats.block_hits += n
+        self.stats.block_misses += len(hits) - n
+        return n
+
+    def admit(self, tokens: np.ndarray, now: Optional[float] = None) -> int:
+        """Insert all blocks of a finished prefill into the active gen."""
+        keys = block_hashes(tokens, self.block)
+        if keys.size == 0:
+            return 0
+        new = keys[~self.filt.lookup(keys, now=now)]
+        if new.size:
+            self.filt.insert(new, now=now)
+            self.stats.admitted += new.size
+        return int(new.size)
+
+    def evict(self, tokens: np.ndarray) -> int:
+        """No-op: generational aging (TTL/rotation) replaces per-key
+        eviction — see the class docstring."""
+        del tokens
+        return 0
 
     @property
     def hit_rate(self) -> float:

@@ -10,6 +10,14 @@ jitted prefill/decode steps from ``engine.py``.
 Semantics follow vLLM-style continuous batching, reduced to what a dry-run
 framework needs: slot lifecycle (admit → prefill → decode* → finish/evict),
 prefix reuse accounting, and backpressure statistics.
+
+Backpressure has two layers since the streaming subsystem landed:
+queue depth (always on), and — when an ``AdmissionController``
+(``repro.streaming.admission``) is attached — the filter-side congestion
+signal (overflow-stash fill + generation fill).  A tripped controller
+defers new requests into a side queue that drains once the signal drops
+below the hysteresis low-water mark, so a membership-layer burst sheds
+load *before* it turns into decode-slot starvation.
 """
 from __future__ import annotations
 
@@ -44,6 +52,7 @@ class SchedStats:
     peak_queue: int = 0
     prefix_blocks_reused: int = 0
     wasted_slot_steps: int = 0    # decode steps with idle slots (burst gaps)
+    deferred: int = 0             # requests parked by admission control
 
 
 class ContinuousBatcher:
@@ -57,13 +66,22 @@ class ContinuousBatcher:
 
     def __init__(self, model, params, *, slots: int = 4, cache_len: int = 512,
                  block: int = 32, dtype=jnp.float32,
-                 sample_fn: Optional[Callable] = None):
+                 sample_fn: Optional[Callable] = None, index=None,
+                 admission=None):
+        """``index``: any PrefixCacheIndex-duck (e.g. the streaming
+        ``GenerationalPrefixIndex``); defaults to the OCF-backed one.
+        ``admission``: optional ``streaming.AdmissionController`` — when its
+        congestion signal trips, ``submit`` parks requests in ``deferred``
+        until the signal recedes."""
         self.model = model
         self.params = params
         self.slots = slots
         self.cache_len = cache_len
-        self.index = PrefixCacheIndex(block=block)
+        self.index = index if index is not None else PrefixCacheIndex(
+            block=block)
+        self.admission = admission
         self.queue: deque[Request] = deque()
+        self.deferred: deque[Request] = deque()
         self.active: dict[int, Request] = {}
         self.pos = np.zeros(slots, dtype=np.int64)
         self.caches = [None] * slots
@@ -76,15 +94,51 @@ class ContinuousBatcher:
 
     # ------------------------------------------------------------ intake --
 
-    def submit(self, req: Request):
+    def submit(self, req: Request) -> bool:
+        """Queue a request; returns False when admission control deferred
+        it (it stays in ``deferred`` and re-enters on a later tick)."""
+        if self.admission is not None and not self.admission.admit():
+            self.deferred.append(req)
+            self.stats.deferred += 1
+            return False
         self.queue.append(req)
         self.stats.admitted += 1
         self.stats.peak_queue = max(self.stats.peak_queue, len(self.queue))
+        return True
+
+    def _drain_deferred(self):
+        """Re-admit parked requests while the congestion signal allows.
+
+        Uses the controller's side-effect-free ``peek`` so per-tick polling
+        does not inflate its per-request counters.  If the batcher is fully
+        starved (everything deferred, nothing queued or decoding), the
+        congestion signal can never recede on its own — nothing mutates the
+        filter — so age it: reclaim TTL-expired generations, else rotate
+        (the same early-rotate policy the filter applies under insert
+        pressure); the next tick re-checks.
+        """
+        # One peek gates the whole drain: nothing in this loop mutates the
+        # filter, so the congestion signal (a device read) cannot change
+        # between iterations — don't pay one transfer per request.
+        if self.deferred and self.admission.peek():
+            while self.deferred:
+                self.queue.append(self.deferred.popleft())
+                self.stats.admitted += 1
+                self.stats.peak_queue = max(self.stats.peak_queue,
+                                            len(self.queue))
+        if self.deferred and not self.queue and not self.active:
+            filt = self.admission.filt
+            if not filt.advance():
+                filt.rotate()
 
     @property
     def congestion(self) -> float:
-        """Queue pressure in [0, inf): the EOF-style congestion signal."""
-        return len(self.queue) / max(1, self.slots)
+        """Queue pressure (+ filter congestion when admission is wired):
+        the EOF-style signal, in [0, inf)."""
+        q = (len(self.queue) + len(self.deferred)) / max(1, self.slots)
+        if self.admission is not None:
+            q += self.admission.signal()
+        return q
 
     # ------------------------------------------------------------- tick ---
 
@@ -104,6 +158,8 @@ class ContinuousBatcher:
 
     def step(self) -> int:
         """One scheduler tick; returns number of live requests decoded."""
+        if self.admission is not None and self.deferred:
+            self._drain_deferred()
         for slot in range(self.slots):
             if slot not in self.active and self.queue:
                 self._admit_one(slot, self.queue.popleft())
@@ -129,7 +185,8 @@ class ContinuousBatcher:
 
     def run_until_drained(self, max_ticks: int = 10_000) -> SchedStats:
         ticks = 0
-        while (self.queue or self.active) and ticks < max_ticks:
+        while ((self.queue or self.active or self.deferred)
+               and ticks < max_ticks):
             self.step()
             ticks += 1
         return self.stats

@@ -1,0 +1,25 @@
+"""Streaming membership subsystem: TTL-aged generations + overflow stash.
+
+Public surface:
+
+  * ``GenerationalFilter`` / ``GenerationConfig`` — K rotating filter
+    generations over a preallocated buffer pool, lazy TTL expiry, stash-
+    backed inserts (``generations.py``);
+  * ``OverflowStash`` — the host-facing stash wrapper (``stash.py``; device
+    math in ``repro.kernels.stash``);
+  * ``AdmissionController`` / ``AdmissionConfig`` / ``congestion_signal`` —
+    stash+fill backpressure for the serving scheduler and the EOF resize
+    policy (``admission.py``);
+  * ``PyStashFilter`` — the sequential stash-extended oracle the kernels
+    are parity-tested against (``oracle.py``).
+"""
+from repro.streaming.admission import (AdmissionConfig, AdmissionController,
+                                       congestion_signal)
+from repro.streaming.generations import (GenerationConfig,
+                                         GenerationalFilter, GenStats)
+from repro.streaming.oracle import PyStashFilter
+from repro.streaming.stash import OverflowStash
+
+__all__ = ["AdmissionConfig", "AdmissionController", "congestion_signal",
+           "GenerationConfig", "GenerationalFilter", "GenStats",
+           "OverflowStash", "PyStashFilter"]

@@ -1,0 +1,112 @@
+"""Sequential oracle for the stash-extended filter — `pyfilter` + a stash.
+
+``PyStashFilter`` extends the semantic oracle (``core.pyfilter``) with the
+overflow stash the streaming subsystem adds to the device data plane.  Its
+eviction schedule replicates the *kernel's* chain discipline (probe-then-
+kick rounds, dirty-slot exclusion, spill-on-exhaustion) rather than the
+classic ``max_displacements`` chain, so that for single-lane residues — one
+contended key per batch — the Pallas insert kernel reproduces this oracle
+**bit for bit**: same table, same stash entries, same order.  Multi-lane
+batches are order-racy by construction on any parallel schedule; there the
+parity contract is membership + conservation, not table identity (exactly
+the contract the PR-3 eviction tests already use).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.pyfilter import PyCuckooFilter
+
+
+@dataclasses.dataclass
+class PyStashFilter(PyCuckooFilter):
+    """Cuckoo filter + overflow stash, kernel-faithful eviction rounds.
+
+    ``evict_rounds`` plays the kernel's role (bounded rounds, not bounded
+    kicks: a round whose bucket is fully dirty burns the round without
+    kicking, exactly like a lane losing its rank race).  ``stash`` holds
+    ``(fp, bucket)`` pairs; by the alternate-index involution the stored
+    bucket identifies the fingerprint's candidate pair regardless of which
+    end of it the chain held at exhaustion.
+    """
+
+    evict_rounds: int = 32
+    stash_slots: int = 128
+
+    def __post_init__(self):
+        super().__post_init__()
+        self.stash: list[tuple[int, int]] = []   # (fp, bucket)
+        self.spills = 0
+
+    # -- core ops ------------------------------------------------------
+
+    def lookup(self, key: int) -> bool:
+        fp, i1 = self._fp_i1(key)
+        i2 = self._alt(i1, fp)
+        if super().lookup(key):
+            return True
+        return any(sf == fp and sb in (i1, i2) for sf, sb in self.stash)
+
+    def insert(self, key: int) -> bool:
+        """Insert; spills to the stash when the round budget exhausts.
+
+        Chain schedule == kernel ``_evict_rounds`` for a single lane:
+        per round, (A) place the carried fingerprint in the first empty
+        slot of the current bucket, else (B) kick the first non-dirty slot
+        rotating from ``steps % bucket_size``, chase the victim to its
+        alternate bucket.  On exhaustion the carried fingerprint parks in
+        the stash (kicks stay committed); only a full stash rolls back.
+        """
+        fp, i1 = self._fp_i1(key)
+        i2 = self._alt(i1, fp)
+        for i in (i1, i2):
+            slot = np.where(self.table[i] == 0)[0]
+            if slot.size:
+                self.table[i, slot[0]] = fp
+                self.count += 1
+                return True
+        bucket, carried, steps = i2, np.uint32(fp), 0
+        dirty: set[tuple[int, int]] = set()
+        hist: list[tuple[int, int, np.uint32]] = []
+        for _round in range(self.evict_rounds):
+            empty = np.where(self.table[bucket] == 0)[0]
+            if empty.size:                        # phase A: place carried
+                self.table[bucket, empty[0]] = carried
+                self.count += 1
+                return True
+            slot = None
+            for j in range(self.bucket_size):     # first non-dirty slot,
+                cand = (steps + j) % self.bucket_size   # rotating
+                if (bucket, cand) not in dirty:
+                    slot = cand
+                    break
+            if slot is None:                      # fully-dirty bucket:
+                continue                          # burn the round, no kick
+            victim = self.table[bucket, slot]
+            self.table[bucket, slot] = carried
+            dirty.add((bucket, slot))
+            hist.append((bucket, slot, carried))
+            carried = victim
+            bucket = self._alt(bucket, int(carried))
+            steps += 1
+        if len(self.stash) < self.stash_slots:    # spill: kicks stay
+            self.stash.append((int(carried), int(bucket)))
+            self.spills += 1
+            return True
+        for (bi, bj, w) in reversed(hist):        # stash full too: rollback
+            # newest-first restore, identical to the kernel's rb_body:
+            # put the carried victim back, pick up what the kick wrote.
+            self.table[bi, bj] = carried
+            carried = w
+        assert carried == fp                      # chain unwound losslessly
+        return False
+
+    def stash_array(self) -> np.ndarray:
+        """The stash as the kernels' uint32[2, slots] layout (tests)."""
+        out = np.zeros((2, self.stash_slots), dtype=np.uint32)
+        for k, (sf, sb) in enumerate(self.stash):
+            out[0, k] = sf
+            out[1, k] = sb
+        return out

@@ -1,0 +1,42 @@
+"""Host-facing wrapper around the device-resident overflow stash.
+
+The device math (layout, fused match, rank-resolved spill) lives in
+``repro.kernels.stash`` — one jnp definition shared by the Pallas kernels,
+the jnp dispatch arm, and the tests.  This module is the *policy* view the
+streaming subsystem holds: occupancy/fill accounting for the admission
+signal, and reset-on-retirement for generation rotation.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.kernels.stash import (DEFAULT_STASH_SLOTS, make_stash,
+                                 stash_occupancy)
+
+
+@dataclasses.dataclass
+class OverflowStash:
+    """A fixed-size overflow stash bound to one filter generation.
+
+    ``array`` is the uint32[2, slots] device buffer the kernels alias
+    in→out; rebinding it after each ``FilterOps.insert_spill`` call is the
+    only mutation.  ``fill`` (occupancy / slots) is the first half of the
+    admission congestion signal (``streaming.admission``).
+    """
+
+    slots: int = DEFAULT_STASH_SLOTS
+    array: jax.Array = None  # type: ignore[assignment]
+
+    def __post_init__(self):
+        if self.array is None:
+            self.array = make_stash(self.slots)
+
+    @property
+    def occupancy(self) -> int:
+        return int(stash_occupancy(self.array))
+
+    @property
+    def fill(self) -> float:
+        return self.occupancy / self.slots
