@@ -1,0 +1,67 @@
+#!/usr/bin/env python
+"""Bench-regression gate: fail when a fresh ``BENCH_filter.json`` shows any
+``*_keys_per_s`` row more than ``THRESHOLD`` below the committed one.
+
+Run by ``scripts/verify.sh`` right after the filter_bench smoke (which
+rewrites ``BENCH_filter.json`` at the repo root); compares against the
+version committed at HEAD via ``git show``, so the gate always measures
+against the trajectory the repo actually promises.  A PR that slows a hot
+path >20% must either fix the regression or consciously commit the slower
+numbers (changing the baseline in the same commit clears the gate).
+
+Exit codes: 0 pass / 1 regression / 0 with a notice when there is no
+committed baseline (first run) or no git.  ``BENCH_GATE_THRESHOLD``
+overrides the drop threshold (fraction, default 0.20) — the CPU container
+rows are minima over interleaved trials, but a loaded machine can still
+dip; raise the threshold there rather than deleting the gate.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+THRESHOLD = float(os.environ.get("BENCH_GATE_THRESHOLD", "0.20"))
+
+
+def main() -> int:
+    fresh_path = os.path.join(REPO, "BENCH_filter.json")
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+    try:
+        committed = json.loads(subprocess.check_output(
+            ["git", "-C", REPO, "show", "HEAD:BENCH_filter.json"],
+            text=True, stderr=subprocess.DEVNULL))
+    except (subprocess.CalledProcessError, FileNotFoundError):
+        print("bench gate: no committed BENCH_filter.json baseline; skipping")
+        return 0
+    bad = []
+    for key, base in sorted(committed.items()):
+        if not key.endswith("_keys_per_s") or not isinstance(base, (int,
+                                                                    float)):
+            continue
+        cur = fresh.get(key)
+        if cur is None:
+            bad.append(f"  {key}: row disappeared (baseline {base})")
+            continue
+        if base > 0 and cur < base * (1.0 - THRESHOLD):
+            bad.append(f"  {key}: {cur} vs baseline {base} "
+                       f"({cur / base - 1.0:+.0%}, limit -{THRESHOLD:.0%})")
+    if bad:
+        print(f"bench gate FAILED ({len(bad)} row(s) regressed "
+              f">{THRESHOLD:.0%}):")
+        print("\n".join(bad))
+        print("fix the regression, or commit the new BENCH_filter.json as "
+              "the intended baseline; on a host slower than the one that "
+              "produced the baseline, set BENCH_GATE_THRESHOLD higher.")
+        return 1
+    n = sum(1 for k in committed if k.endswith("_keys_per_s"))
+    print(f"bench gate OK ({n} keys/s rows within -{THRESHOLD:.0%} "
+          "of baseline)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

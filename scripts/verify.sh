@@ -27,4 +27,9 @@ python -m pytest -m tier1 -x -q
 echo "== filter_bench smoke =="
 python benchmarks/filter_bench.py
 
+echo "== bench-regression gate =="
+# Fails if any *_keys_per_s row in the fresh BENCH_filter.json dropped >20%
+# below the committed baseline (BENCH_GATE_THRESHOLD overrides).
+python scripts/bench_gate.py
+
 echo "verify OK"

@@ -26,12 +26,38 @@ def pow2_at_least(n: int) -> int:
     return p
 
 
-def key_chunks(keys: np.ndarray, chunk: int = CHUNK):
+def collect_chunk_results(parts, ns, dtype=bool) -> np.ndarray:
+    """Stack per-chunk device results and pull them back in ONE transfer.
+
+    ``parts`` are the fixed-``CHUNK``-shaped device arrays a batched op
+    queued (one per ``key_chunks`` batch), ``ns`` the real lane counts.
+    Stacking on device and materializing once is the transfer discipline
+    every control plane here follows — per-chunk ``np.asarray`` round-trips
+    serialize the whole batch on device->host latency (the seed's OCF did
+    exactly that on its insert path).
+    """
+    if not parts:
+        return np.zeros((0,), dtype)
+    stacked = np.asarray(jnp.stack(parts))
+    out = np.empty((sum(ns),), stacked.dtype)
+    off = 0
+    for i, n in enumerate(ns):
+        out[off:off + n] = stacked[i, :n]
+        off += n
+    return out
+
+
+def key_chunks(keys: np.ndarray, chunk: int = CHUNK, *,
+               with_valid: bool = True):
     """Yield (hi, lo, valid, n_real) fixed-size device batches.
 
     The tail chunk is zero-padded with ``valid=False`` lanes, which never
     touch a table, so callers compile exactly one executable per chunk
-    shape regardless of batch size.
+    shape regardless of batch size.  Lookup paths pass
+    ``with_valid=False`` (yielding ``valid=None``): probes ignore the mask
+    — padding lanes just probe the zero key and get sliced off — so
+    building and transferring a bool[CHUNK] per chunk is pure overhead on
+    the read hot path.
     """
     for i in range(0, keys.size, chunk):
         part = keys[i:i + chunk]
@@ -39,6 +65,9 @@ def key_chunks(keys: np.ndarray, chunk: int = CHUNK):
         if n < chunk:
             part = np.pad(part, (0, chunk - n))
         hi, lo = hashing.key_to_u32_pair_np(part)
-        valid = np.zeros(chunk, bool)
-        valid[:n] = True
-        yield jnp.asarray(hi), jnp.asarray(lo), jnp.asarray(valid), n
+        if with_valid:
+            valid = np.zeros(chunk, bool)
+            valid[:n] = True
+            yield jnp.asarray(hi), jnp.asarray(lo), jnp.asarray(valid), n
+        else:
+            yield jnp.asarray(hi), jnp.asarray(lo), None, n

@@ -89,6 +89,19 @@ class FilterOps:
     # (= 32 rounds); pass evict_rounds_for_load(o_max) for other loads, the
     # way OcfConfig.make_filter_ops does.
     evict_rounds: Optional[int] = None
+    # Conflict-aware wave scheduling of insert batches (core/scheduling.py):
+    # dispatch lanes wave-major by home bucket so blocks meet fewer rank
+    # races / eviction rounds.  Off by default — the pre-pass permutes the
+    # table layout relative to an unscheduled run, which callers comparing
+    # tables bit-for-bit across backends must not enable.  The control
+    # planes (OcfConfig / GenerationConfig) turn it on.
+    schedule: bool = False
+    # Buffer donation: mutating ops consume the caller's table (and stash)
+    # buffers so XLA updates them in place instead of copying the pow2
+    # buffer every batch.  ONLY for callers that own their buffers and
+    # never reuse a pre-op array (the control planes qualify; a benchmark
+    # re-inserting into one base state does not).
+    donate: bool = False
 
     def __post_init__(self):
         assert self.backend in ("jnp", "pallas", "auto"), (
@@ -101,7 +114,12 @@ class FilterOps:
     # -------------------------------------------------------- dispatch --
 
     def resolve(self, table: jax.Array, *, stash_slots: int = 0) -> str:
-        """Concrete backend for this table ('auto' -> hardware decision).
+        """Concrete backend for this table ('auto' -> hardware decision)."""
+        return self.resolve_bytes(table.size * 4, stash_slots=stash_slots)
+
+    def resolve_bytes(self, table_bytes: int, *, stash_slots: int = 0) -> str:
+        """Concrete backend for a table of this size ('auto' -> hardware
+        decision).
 
         Budgets against the insert kernel's footprint — the most demanding
         of the three (aliased table + dirty bitmap + eviction history, plus
@@ -113,8 +131,15 @@ class FilterOps:
         """
         if self.backend != "auto":
             return self.backend
+        # Budget with the block the kernel would actually run at (the
+        # autotuner only returns budget-fitting candidates), not a fixed
+        # 1024 — otherwise 'auto' rejects mid-size tables whose [B, B]
+        # rank term the autotuned block was chosen to shrink.
+        block = kops.autotune_block("insert", table_bytes=table_bytes,
+                                    evict_rounds=self.evict_rounds,
+                                    stash_slots=stash_slots)
         if kops._on_tpu() and kops.kernel_vmem_bytes(
-                "insert", table_bytes=table.size * 4, block=1024,
+                "insert", table_bytes=table_bytes, block=block,
                 evict_rounds=self.evict_rounds,
                 stash_slots=stash_slots) <= kops.VMEM_TABLE_BUDGET:
             return "pallas"
@@ -126,10 +151,9 @@ class FilterOps:
                lo: jax.Array) -> jax.Array:
         """Membership for a batch -> bool[N]."""
         if self.resolve(state.table) == "pallas":
-            return kops.filter_lookup(state.table, hi, lo,
-                                      fp_bits=self.fp_bits,
-                                      n_buckets=state.n_buckets,
-                                      use_pallas="always")
+            return kops.probe_dispatch(state.table, hi, lo,
+                                       fp_bits=self.fp_bits,
+                                       n_buckets=state.n_buckets)
         return jfilter.bulk_lookup(state, hi, lo, fp_bits=self.fp_bits)
 
     def insert(self, state: jfilter.FilterState, hi: jax.Array,
@@ -147,10 +171,15 @@ class FilterOps:
             table, ok = kops.filter_insert(
                 state.table, hi, lo, fp_bits=self.fp_bits,
                 n_buckets=state.n_buckets, valid=valid,
-                evict_rounds=self.evict_rounds, use_pallas="always")
+                evict_rounds=self.evict_rounds, use_pallas="always",
+                schedule=self.schedule, donate=self.donate)
             return jfilter.FilterState(
                 table, state.count + jnp.sum(ok, dtype=jnp.int32),
                 state.n_buckets), ok
+        # Donation is a kernel-pipeline feature: wrapping the already-jitted
+        # hybrid in a donating outer jit measured ~10% SLOWER on CPU (the
+        # rewrap costs more than the one table copy it saves), so the jnp
+        # arm stays undonated.
         return jfilter.bulk_insert_hybrid(state, hi, lo, fp_bits=self.fp_bits,
                                           max_disp=self.max_disp, valid=valid)
 
@@ -164,12 +193,15 @@ class FilterOps:
         pallas: the probe kernel checks the stash in the same fused pass.
         jnp: table probe OR'd with the jnp stash match — identical answers.
         """
-        up = ("always" if self.resolve(state.table,
-                                       stash_slots=stash.shape[1])
-              == "pallas" else "never")
+        if self.resolve(state.table,
+                        stash_slots=stash.shape[1]) == "pallas":
+            return kops.probe_dispatch(state.table, hi, lo,
+                                       fp_bits=self.fp_bits,
+                                       n_buckets=state.n_buckets,
+                                       stash=stash)
         return kops.filter_lookup(state.table, hi, lo, fp_bits=self.fp_bits,
                                   n_buckets=state.n_buckets, stash=stash,
-                                  use_pallas=up)
+                                  use_pallas="never")
 
     def insert_spill(self, state: jfilter.FilterState, stash: jax.Array,
                      hi: jax.Array, lo: jax.Array,
@@ -192,7 +224,8 @@ class FilterOps:
             state.table, hi, lo, fp_bits=self.fp_bits,
             n_buckets=state.n_buckets, valid=valid,
             evict_rounds=self.evict_rounds, stash=stash,
-            max_disp=self.max_disp, use_pallas=up)
+            max_disp=self.max_disp, use_pallas=up,
+            schedule=self.schedule, donate=self.donate)
         newly_stashed = kops.stash_occupancy(new_stash) - spilled_before
         count = state.count + jnp.sum(ok, dtype=jnp.int32) - newly_stashed
         return jfilter.FilterState(table, count, state.n_buckets), \
@@ -210,7 +243,8 @@ class FilterOps:
         if self.resolve(state.table) == "pallas":
             table, ok = kops.filter_delete(
                 state.table, hi, lo, fp_bits=self.fp_bits,
-                n_buckets=state.n_buckets, valid=valid, use_pallas="always")
+                n_buckets=state.n_buckets, valid=valid, use_pallas="always",
+                donate=self.donate)
             return jfilter.FilterState(
                 table, state.count - jnp.sum(ok, dtype=jnp.int32),
                 state.n_buckets), ok
@@ -225,6 +259,28 @@ class FilterOps:
         state = jfilter.make_state(n_buckets, bucket_size,
                                    buffer_buckets=buffer_buckets)
         return self.insert(state, hi, lo, valid=valid)
+
+    def fanout_prober(self, tables: jax.Array, stashes: jax.Array, *,
+                      n_buckets):
+        """Dispatch-resolved fan-out closure -> callable (hi, lo) -> bool[N].
+
+        Membership across K stacked generations: ``tables`` is
+        uint32[K, buffer_buckets, bucket_size] (the generation ring's pool
+        buffers stacked), ``stashes`` uint32[K, 2, S], ``n_buckets`` the
+        generations' shared active count.  pallas: ONE fused
+        ``probe_multi`` launch whose grid spans every generation (keys
+        hashed once); jnp: the per-generation probe/stash loop with
+        identical answers.  Block size, VMEM budget, and dispatch arm are
+        pinned once — the generation ring caches the closure across a
+        batch's chunks (per-chunk re-derivation costs ~15% of a chunk on
+        the serving hot path).
+        """
+        per_bytes = (tables.size // tables.shape[0]) * 4
+        up = ("always" if self.resolve_bytes(
+            per_bytes, stash_slots=stashes.shape[2]) == "pallas" else "never")
+        return kops.multi_prober(tables, fp_bits=self.fp_bits,
+                                 n_buckets=n_buckets, stashes=stashes,
+                                 use_pallas=up)
 
     # ------------------------------------------------- raw-table probes --
 

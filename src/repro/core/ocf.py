@@ -25,10 +25,11 @@ import dataclasses
 from typing import Literal, Optional
 
 import numpy as np
-import jax.numpy as jnp
 
-from repro.core.chunking import key_chunks, pow2_at_least
+from repro.core.chunking import (collect_chunk_results, key_chunks,
+                                 pow2_at_least)
 from repro.core.filter_ops import Backend, FilterOps, evict_rounds_for_load
+from repro.core.scheduling import dedupe_keys
 # Leaf-module import (NOT repro.kernels.ops): core/__init__ runs during the
 # kernel package's own init when an entry point imports kernels first, and
 # ops would be partially initialized here.  kernels/stash.py only needs
@@ -60,6 +61,19 @@ class OcfConfig:
     # triggering an emergency grow+rebuild; the stash is re-derived empty on
     # every rebuild, which also reclaims entries whose key was deleted.
     stash_slots: int = 0
+    # Conflict-aware wave scheduling of insert batches (core/scheduling.py)
+    # on the pallas data plane — fewer intra-batch rank races and eviction
+    # rounds; membership semantics unchanged.
+    schedule: bool = True
+    # Host-side lookup dedup (probe one lane per distinct key in a batch).
+    # Off by default — an all-unique batch pays the np.unique sort for
+    # nothing; dedup-heavy consumers opt in.  Same knob and rationale as
+    # GenerationConfig.dedupe_lookups.
+    dedupe_lookups: bool = False
+    # Buffer donation: the OCF owns its pow2 buffer and never reuses a
+    # pre-op table, so mutating ops update it in place (zero-copy) instead
+    # of copying the buffer every batch.
+    donate: bool = True
     o_max: float = 0.85              # Max Occupancy
     o_min: float = 0.25              # Min Occupancy
     k_min: float = 0.35              # K markers (EOF)
@@ -82,7 +96,9 @@ class OcfConfig:
         return FilterOps(fp_bits=self.fp_bits,
                          max_disp=self.max_displacements,
                          backend=self.backend,
-                         evict_rounds=rounds)
+                         evict_rounds=rounds,
+                         schedule=self.schedule,
+                         donate=self.donate)
 
 
 @dataclasses.dataclass
@@ -151,17 +167,25 @@ class OCF:
     def lookup(self, keys) -> np.ndarray:
         keys = np.asarray(keys, dtype=np.uint64)
         self.stats.lookups += keys.size
-        out = np.zeros(keys.size, bool)
-        off = 0
-        for hi, lo, _valid, n in self._chunks(keys):
+        # Dedup pre-pass (core/scheduling.py, opt-in): probes are
+        # idempotent, so a batch with in-batch repeats only pays one device
+        # lane per distinct key; answers broadcast back through the
+        # inverse index.
+        if self.config.dedupe_lookups:
+            probe_keys, inverse = dedupe_keys(keys)
+        else:
+            probe_keys, inverse = keys, None
+        hits, ns = [], []
+        for hi, lo, _valid, n in self._chunks(probe_keys, with_valid=False):
             if self.stash is not None:
-                hits = self.ops.lookup_with_stash(self.state, self.stash,
-                                                  hi, lo)
+                hit = self.ops.lookup_with_stash(self.state, self.stash,
+                                                 hi, lo)
             else:
-                hits = self.ops.lookup(self.state, hi, lo)
-            out[off:off + n] = np.asarray(hits)[:n]
-            off += n
-        return out
+                hit = self.ops.lookup(self.state, hi, lo)
+            hits.append(hit)
+            ns.append(n)
+        out = collect_chunk_results(hits, ns)
+        return out[inverse] if inverse is not None else out
 
     def insert(self, keys) -> np.ndarray:
         """Insert a batch; returns ok mask (all True unless c_max exhausted)."""
@@ -187,11 +211,7 @@ class OCF:
             self.state = state
             oks.append(ok)
             ns.append(n)
-        failed = 0
-        if oks:
-            ok_all = np.asarray(jnp.stack(oks))
-            failed = sum(int((~ok_all[i, :n]).sum())
-                         for i, n in enumerate(ns))
+        failed = int((~collect_chunk_results(oks, ns)).sum()) if oks else 0
         if self.stash is not None:
             self.stats.stash_spills += int(
                 stash_occupancy(self.stash) - spilled_before)

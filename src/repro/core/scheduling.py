@@ -1,0 +1,128 @@
+"""Conflict-aware batch scheduling — the data plane's dispatch pre-pass.
+
+Cuckoo-GPU-style batch filters get their throughput from *batch-level*
+scheduling: group the operations of a batch by target bucket before any of
+them touches the table, so the table pass itself meets as few intra-batch
+conflicts as possible.  This module is that pre-pass, shared by the insert
+kernels (`kernels/insert.py` applies it inside the jitted wrapper when
+``schedule=True``) and the host control planes (lookup dedup).
+
+Two pieces:
+
+* **Wave construction** (device-side, jittable).  Every lane's home bucket
+  is ranked within its equal-bucket group: the k-th lane targeting a bucket
+  lands in *wave k*.  Dispatching the batch in (wave, bucket) order means
+  each wave is **conflict-free** — at most one lane per bucket — so the
+  kernel's placement rounds stop burning rank races and the bounded
+  eviction loop stops burning rounds on lanes that lost a one-kick-per-
+  bucket lottery.  In-batch repeats of one key (same bucket, same
+  fingerprint) are what this deduplicates on the insert path: they are
+  pulled apart into consecutive waves instead of colliding in one block.
+
+  The sort is **stable per bucket**: lanes sharing a bucket keep their
+  original relative order (their waves ascend with their batch positions),
+  so the rank each lane sees inside `_place_round` — "how many earlier
+  lanes target my bucket" — is unchanged by the permutation.  Scheduling
+  therefore reorders *work*, never *outcomes-by-rank*; the `ok` mask is
+  scattered back through the inverse permutation and single-lane residue
+  chains stay bit-for-bit identical to the sequential oracle
+  (`streaming/oracle.py::PyStashFilter` — tested in
+  tests/test_scheduling.py).
+
+* **Lookup dedup** (host-side).  Probes are idempotent, so a batch with
+  in-batch repeats only needs one device lane per distinct key;
+  ``dedupe_keys`` is the numpy pre-pass the OCF lookup path uses to
+  collapse repeats before chunking, with the answers broadcast back
+  through the inverse index.  Streams with no repeats pay one ``np.unique``
+  sort and lose nothing; dedup-heavy streams (the streaming subsystem's
+  whole workload) probe a fraction of their lanes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing
+
+# Invalid (padding) lanes park on a bucket id no real table reaches, so they
+# sort behind every real lane and never split a wave.
+_PARKED = jnp.int32(1 << 30)
+
+
+def conflict_waves(bucket: jax.Array, valid: jax.Array) -> jax.Array:
+    """Occurrence rank of each lane within its equal-bucket group -> int32[N].
+
+    wave[i] = #earlier valid lanes targeting the same bucket as lane i —
+    the wave index the lane dispatches in.  Invalid lanes get wave N (past
+    every real wave).  Sort-based (two stable argsorts), no [N, N]
+    broadcast-compare: the pre-pass must stay cheap for batches far larger
+    than a kernel block.
+    """
+    n = bucket.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    b = jnp.where(valid, bucket.astype(jnp.int32), _PARKED)
+    order = jnp.argsort(b, stable=True)
+    sb = b[order]
+    new_run = jnp.concatenate([jnp.ones((1,), bool), sb[1:] != sb[:-1]])
+    run_start = jax.lax.associative_scan(jnp.maximum,
+                                         jnp.where(new_run, idx, 0))
+    wave_sorted = idx - run_start
+    wave = jnp.zeros((n,), jnp.int32).at[order].set(wave_sorted)
+    return jnp.where(valid, wave, jnp.int32(n))
+
+
+def dispatch_order(hi: jax.Array, lo: jax.Array, valid: jax.Array, *,
+                   n_buckets) -> tuple[jax.Array, jax.Array]:
+    """Conflict-free-wave dispatch permutation -> (perm, inv), int32[N] each.
+
+    ``perm`` reorders a batch wave-major (wave 0's lanes first, each wave
+    holding at most one lane per home bucket; invalid lanes last); ``inv``
+    scatters per-lane results back to the caller's order
+    (``out[inv] == out_of_original_lane``).  Both sorts are stable, so
+    same-bucket lanes keep their original relative order — the property
+    that makes scheduling invisible to rank-based placement (see module
+    docstring).
+    """
+    n = hi.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    i1 = hashing.index_hash_dyn(hi, lo, n_buckets).astype(jnp.int32)
+    b = jnp.where(valid, i1, _PARKED)
+    wave = conflict_waves(i1, valid)
+    ord_b = jnp.argsort(b, stable=True)           # bucket-minor ...
+    ord_w = jnp.argsort(wave[ord_b], stable=True)  # ... then wave-major
+    perm = ord_b[ord_w]
+    inv = jnp.zeros((n,), jnp.int32).at[perm].set(idx)
+    return perm, inv
+
+
+@jax.jit
+def wave_count(i1: jax.Array, valid: jax.Array) -> jax.Array:
+    """Number of conflict-free waves a batch schedules into -> int32[].
+
+    1 == the batch was already conflict-free; K == some bucket is targeted
+    by K lanes.  Bench introspection (`BENCH_filter.json` records it for
+    the contended-residue workload) and a direct measure of how much
+    serialization the scheduler is unwinding.
+    """
+    w = conflict_waves(i1, valid)
+    return jnp.max(jnp.where(valid, w + 1, 0), initial=0)
+
+
+def dedupe_keys(keys: np.ndarray) -> tuple[np.ndarray, "np.ndarray | None"]:
+    """Host-side lookup dedup -> (probe_keys, inverse-or-None).
+
+    With in-batch repeats: ``probe_keys`` is the unique set and
+    ``probe_keys[inverse] == keys`` — probe the unique set, answer the
+    original batch with ``hits_unique[inverse]``.  With no repeats the
+    original ``keys`` come back with ``inverse=None``, so every caller is
+    the same two lines (probe; gather-if-inverse).  Probes are idempotent
+    so this is semantics-free; it exists because dedup-window streams send
+    the same hot keys many times per batch and each device lane costs the
+    same whether or not its key repeats.
+    """
+    keys = np.asarray(keys)
+    uniq, inverse = np.unique(keys, return_inverse=True)
+    if uniq.size == keys.size:
+        return keys, None
+    return uniq, inverse

@@ -70,37 +70,29 @@ def _clear_round(table, target, active, fp):
     return table, hits
 
 
-def _delete_kernel(n_ref, table_in_ref, hi_ref, lo_ref, valid_ref, table_ref,
-                   ok_ref, *, fp_bits: int):
-    del table_in_ref  # aliased to table_ref (the output) — read/write there
-    n_buckets = n_ref[0, 0]
-    table = table_ref[...]
-    hi = hi_ref[...]
-    lo = lo_ref[...]
-    valid = valid_ref[...]
+def _delete_body(table, hi, lo, valid, n_buckets, *, fp_bits: int):
+    """Hash + home/alternate clear rounds on loaded values -> (table, ok)."""
     fp = hashing.fingerprint(hi, lo, fp_bits)
     i1 = hashing.index_hash_dyn(hi, lo, n_buckets).astype(jnp.int32)
     i2 = hashing.alt_index_dyn(i1, fp, n_buckets).astype(jnp.int32)
     table, ok1 = _clear_round(table, i1, valid, fp)
     table, ok2 = _clear_round(table, i2, valid & ~ok1, fp)
+    return table, ok1 | ok2
+
+
+def _delete_kernel(n_ref, table_in_ref, hi_ref, lo_ref, valid_ref, table_ref,
+                   ok_ref, *, fp_bits: int):
+    del table_in_ref  # aliased to table_ref (the output) — read/write there
+    table, ok = _delete_body(table_ref[...], hi_ref[...], lo_ref[...],
+                             valid_ref[...], n_ref[0, 0], fp_bits=fp_bits)
     table_ref[...] = table
-    ok_ref[...] = ok1 | ok2
+    ok_ref[...] = ok
 
 
-@functools.partial(jax.jit, static_argnames=("fp_bits", "block", "interpret"))
-def delete_bulk(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
-                fp_bits: int, n_buckets=None, valid=None,
-                block: int = DEFAULT_BLOCK, interpret: bool = True
-                ) -> tuple[jax.Array, jax.Array]:
-    """Fused bulk delete -> (new_table, deleted bool[N]).
-
-    N must be a block multiple (ops.py pads).  ``n_buckets`` is the ACTIVE
-    bucket count (may be < ``table.shape[0]`` for the OCF's pow2 buffer).
-    Lanes with ``valid=False`` never touch the table.  Callers are expected
-    to have verified membership against the keystore (the OCF control plane
-    does) — like every cuckoo delete, clearing a fingerprint that was never
-    inserted corrupts another key's slot.
-    """
+def _delete_bulk_impl(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
+                      fp_bits: int, n_buckets=None, valid=None,
+                      block: int = DEFAULT_BLOCK, interpret: bool = True,
+                      emulate: bool = False) -> tuple[jax.Array, jax.Array]:
     n = hi.shape[0]
     block = min(block, n)
     assert n % block == 0, f"{n=} not a multiple of {block=}"
@@ -109,6 +101,24 @@ def delete_bulk(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
         n_buckets = buffer_buckets
     if valid is None:
         valid = jnp.ones((n,), bool)
+    hi = hi.astype(jnp.uint32)
+    lo = lo.astype(jnp.uint32)
+    if emulate:
+        # The kernel's sequential grid as a compiled lax.scan (table carried
+        # between blocks) — bit-for-bit the pallas_call, without the
+        # interpreter (see kernels/insert.py::_emulated_insert).
+        g = n // block
+        if g == 1:
+            return _delete_body(table, hi, lo, valid, n_buckets,
+                                fp_bits=fp_bits)
+
+        def step(tbl, x):
+            return _delete_body(tbl, *x, n_buckets, fp_bits=fp_bits)
+
+        table, ok = jax.lax.scan(step, table,
+                                 (hi.reshape(g, block), lo.reshape(g, block),
+                                  valid.reshape(g, block)))
+        return table, ok.reshape(-1)
     n_arr = jnp.asarray(n_buckets, jnp.int32).reshape(1, 1)
     grid = (n // block,)
     smem_spec = pl.BlockSpec((1, 1), lambda i: (0, 0),
@@ -124,5 +134,37 @@ def delete_bulk(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
                    jax.ShapeDtypeStruct((n,), jnp.bool_)],
         input_output_aliases={1: 0},   # table updates in place across steps
         interpret=interpret,
-    )(n_arr, table, hi.astype(jnp.uint32), lo.astype(jnp.uint32), valid)
+    )(n_arr, table, hi, lo, valid)
     return new_table, ok
+
+
+_DELETE_STATICS = ("fp_bits", "block", "interpret", "emulate")
+_delete_bulk_jit = jax.jit(_delete_bulk_impl, static_argnames=_DELETE_STATICS)
+_delete_bulk_donated = jax.jit(_delete_bulk_impl,
+                               static_argnames=_DELETE_STATICS,
+                               donate_argnames=("table",))
+
+
+def delete_bulk(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
+                fp_bits: int, n_buckets=None, valid=None,
+                block: int = DEFAULT_BLOCK, interpret: bool = True,
+                emulate: bool = False, donate: bool = False
+                ) -> tuple[jax.Array, jax.Array]:
+    """Fused bulk delete -> (new_table, deleted bool[N]).
+
+    N must be a block multiple (ops.py pads).  ``n_buckets`` is the ACTIVE
+    bucket count (may be < ``table.shape[0]`` for the OCF's pow2 buffer).
+    Lanes with ``valid=False`` never touch the table.  Callers are expected
+    to have verified membership against the keystore (the OCF control plane
+    does) — like every cuckoo delete, clearing a fingerprint that was never
+    inserted corrupts another key's slot.
+
+    ``emulate`` runs the identical grid as a compiled XLA scan (the off-TPU
+    fast path); ``donate`` hands the table buffer to the call so the
+    cleared table is written in place (callers must own the buffer — the
+    OCF control plane does).  Deletes are never wave-scheduled: duplicate
+    keys must clear the k-th resident copy in lane order.
+    """
+    fn = _delete_bulk_donated if donate else _delete_bulk_jit
+    return fn(table, hi, lo, fp_bits=fp_bits, n_buckets=n_buckets,
+              valid=valid, block=block, interpret=interpret, emulate=emulate)

@@ -40,15 +40,24 @@ def _fingerprint_kernel(hi_ref, lo_ref, fp_ref, i1_ref, i2_ref, *,
 
 @functools.partial(jax.jit,
                    static_argnames=("fp_bits", "n_buckets", "block",
-                                    "interpret"))
+                                    "interpret", "emulate"))
 def fingerprint_hash(hi: jax.Array, lo: jax.Array, *, fp_bits: int,
                      n_buckets: int, block: int = DEFAULT_BLOCK,
-                     interpret: bool = True):
+                     interpret: bool = True, emulate: bool = False):
     """Returns (fp, i1, i2), each uint32[N].  N must be a block multiple
-    (callers pad; ops.py handles that)."""
+    (callers pad; ops.py handles that).  ``emulate`` runs the same hash
+    spec as one compiled XLA pass (the off-TPU fast path; the mixers are
+    pure per-lane bit math, so no grid carry is involved)."""
     n = hi.shape[0]
     block = min(block, n)
     assert n % block == 0, f"{n=} not a multiple of {block=}"
+    if emulate:
+        hi = hi.astype(jnp.uint32)
+        lo = lo.astype(jnp.uint32)
+        fp = hashing.fingerprint(hi, lo, fp_bits)
+        i1 = hashing.index_hash(hi, lo, n_buckets)
+        i2 = hashing.alt_index(i1, fp, n_buckets)
+        return fp, i1, i2
     grid = (n // block,)
     spec = pl.BlockSpec((block,), lambda i: (i,))
     out = pl.pallas_call(

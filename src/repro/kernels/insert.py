@@ -64,6 +64,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import hashing
+from repro.core.scheduling import dispatch_order
 from repro.kernels.rank import rank_among_earlier
 from repro.kernels.stash import stash_spill
 
@@ -270,26 +271,53 @@ def _insert_stash_kernel(n_ref, table_in_ref, stash_in_ref, hi_ref, lo_ref,
     ok_ref[...] = ok
 
 
-@functools.partial(jax.jit, static_argnames=("fp_bits", "evict_rounds",
-                                             "block", "interpret"))
-def insert_bulk(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
-                fp_bits: int, n_buckets=None, valid=None,
-                evict_rounds: int = DEFAULT_EVICT_ROUNDS, stash=None,
-                block: int = DEFAULT_BLOCK, interpret: bool = True):
-    """Full bulk insert (optimistic rounds + bounded eviction rounds)
-    -> (new_table, placed bool[N]), or (new_table, new_stash, placed) when
-    an overflow ``stash`` (``kernels.stash.make_stash``) is attached.
+def _emulated_insert(table, stash, hi, lo, valid, n_buckets, *,
+                     fp_bits: int, evict_rounds: int, block: int):
+    """The kernel schedule compiled by XLA instead of the Pallas interpreter.
 
-    N must be a block multiple (ops.py pads).  ``n_buckets`` is the ACTIVE
-    bucket count (may be < ``table.shape[0]`` for the OCF's pow2 buffer).
-    Lanes with ``valid=False`` never touch the table.  ``evict_rounds=0``
-    degenerates to the PR-1 optimistic-only kernel (``insert_once``).
-    Without a stash, lanes whose chain exceeds the round budget roll back
-    and report False — the control plane treats that exactly like a full
-    filter (grow+rebuild).  With a stash, those lanes spill their carried
-    fingerprint into it (aliased in→out like the table, so grid blocks
-    accumulate) and only roll back once the stash is full too.
+    Bit-for-bit the grid semantics of the ``pallas_call`` below: blocks run
+    sequentially with the table (and stash) carried between them, exactly
+    like the aliased in→out BlockSpecs on a sequential TPU grid — here as a
+    ``lax.scan`` whose carry is the table.  Same ``_insert_body``, same
+    results; this is what the off-TPU dispatch runs so the "pallas" backend
+    is a *throughput* configuration on CPU hosts too, not just a
+    correctness one (the interpreter re-dispatches every primitive per
+    grid step, which is ~100x slower than the compiled scan).
     """
+    g = hi.shape[0] // block
+    if g == 1:
+        table, stash, ok = _insert_body(table, stash, hi, lo, valid,
+                                        n_buckets, fp_bits=fp_bits,
+                                        evict_rounds=evict_rounds)
+        return table, stash, ok
+    xs = (hi.reshape(g, block), lo.reshape(g, block),
+          valid.reshape(g, block))
+
+    if stash is None:
+        def step(tbl, x):
+            tbl, _stash, ok = _insert_body(tbl, None, *x, n_buckets,
+                                           fp_bits=fp_bits,
+                                           evict_rounds=evict_rounds)
+            return tbl, ok
+
+        table, ok = jax.lax.scan(step, table, xs)
+        return table, None, ok.reshape(-1)
+
+    def step(carry, x):
+        tbl, st = carry
+        tbl, st, ok = _insert_body(tbl, st, *x, n_buckets, fp_bits=fp_bits,
+                                   evict_rounds=evict_rounds)
+        return (tbl, st), ok
+
+    (table, stash), ok = jax.lax.scan(step, (table, stash), xs)
+    return table, stash, ok.reshape(-1)
+
+
+def _insert_bulk_impl(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
+                      fp_bits: int, n_buckets=None, valid=None,
+                      evict_rounds: int = DEFAULT_EVICT_ROUNDS, stash=None,
+                      block: int = DEFAULT_BLOCK, interpret: bool = True,
+                      emulate: bool = False, schedule: bool = False):
     n = hi.shape[0]
     block = min(block, n)
     assert n % block == 0, f"{n=} not a multiple of {block=}"
@@ -298,6 +326,30 @@ def insert_bulk(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
         n_buckets = buffer_buckets
     if valid is None:
         valid = jnp.ones((n,), bool)
+    hi = hi.astype(jnp.uint32)
+    lo = lo.astype(jnp.uint32)
+    # A single-block batch gains nothing from the pre-pass: the stable
+    # permutation preserves same-bucket lane order, so with every lane in
+    # one block the ranks and kick order are provably identical — skip the
+    # two argsorts (n and block are trace-time python ints).
+    schedule = schedule and n > block
+    if schedule:
+        # Conflict-aware pre-pass: dispatch wave-major (at most one lane
+        # per home bucket per wave) so blocks meet fewer rank races and
+        # eviction rounds; results scatter back through the inverse
+        # permutation.  See core/scheduling.py for why this cannot change
+        # any lane's placement rank.
+        perm, inv = dispatch_order(hi, lo, valid, n_buckets=n_buckets)
+        hi, lo, valid = hi[perm], lo[perm], valid[perm]
+    if emulate:
+        new_table, new_stash, ok = _emulated_insert(
+            table, stash, hi, lo, valid, n_buckets, fp_bits=fp_bits,
+            evict_rounds=evict_rounds, block=block)
+        if schedule:
+            ok = ok[inv]
+        if stash is None:
+            return new_table, ok
+        return new_table, new_stash, ok
     n_arr = jnp.asarray(n_buckets, jnp.int32).reshape(1, 1)
     grid = (n // block,)
     smem_spec = pl.BlockSpec((1, 1), lambda i: (0, 0),
@@ -316,8 +368,8 @@ def insert_bulk(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
                        jax.ShapeDtypeStruct((n,), jnp.bool_)],
             input_output_aliases={1: 0},  # table updates in place across steps
             interpret=interpret,
-        )(n_arr, table, hi.astype(jnp.uint32), lo.astype(jnp.uint32), valid)
-        return new_table, ok
+        )(n_arr, table, hi, lo, valid)
+        return new_table, ok[inv] if schedule else ok
     stash_spec = pl.BlockSpec(stash.shape, lambda i: (0, 0))
     new_table, new_stash, ok = pl.pallas_call(
         functools.partial(_insert_stash_kernel, fp_bits=fp_bits,
@@ -332,15 +384,66 @@ def insert_bulk(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
         # table and stash update in place across grid steps
         input_output_aliases={1: 0, 2: 1},
         interpret=interpret,
-    )(n_arr, table, stash, hi.astype(jnp.uint32), lo.astype(jnp.uint32),
-      valid)
-    return new_table, new_stash, ok
+    )(n_arr, table, stash, hi, lo, valid)
+    return new_table, new_stash, ok[inv] if schedule else ok
+
+
+_INSERT_STATICS = ("fp_bits", "evict_rounds", "block", "interpret",
+                   "emulate", "schedule")
+_insert_bulk_jit = jax.jit(_insert_bulk_impl, static_argnames=_INSERT_STATICS)
+# Donating twin: the caller hands over the table (and stash) buffers, so
+# XLA writes the output state into them instead of copying the pow2 buffer
+# every batch.  Opt-in via ``donate=True`` — only for callers that own the
+# buffers and never touch the pre-insert arrays again (the OCF and the
+# generation ring do; ad-hoc callers that re-insert into one base state,
+# like the benchmarks, must not).
+_insert_bulk_donated = jax.jit(_insert_bulk_impl,
+                               static_argnames=_INSERT_STATICS,
+                               donate_argnames=("table", "stash"))
+
+
+def insert_bulk(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
+                fp_bits: int, n_buckets=None, valid=None,
+                evict_rounds: int = DEFAULT_EVICT_ROUNDS, stash=None,
+                block: int = DEFAULT_BLOCK, interpret: bool = True,
+                emulate: bool = False, schedule: bool = False,
+                donate: bool = False):
+    """Full bulk insert (optimistic rounds + bounded eviction rounds)
+    -> (new_table, placed bool[N]), or (new_table, new_stash, placed) when
+    an overflow ``stash`` (``kernels.stash.make_stash``) is attached.
+
+    N must be a block multiple (ops.py pads).  ``n_buckets`` is the ACTIVE
+    bucket count (may be < ``table.shape[0]`` for the OCF's pow2 buffer).
+    Lanes with ``valid=False`` never touch the table.  ``evict_rounds=0``
+    degenerates to the PR-1 optimistic-only kernel (``insert_once``).
+    Without a stash, lanes whose chain exceeds the round budget roll back
+    and report False — the control plane treats that exactly like a full
+    filter (grow+rebuild).  With a stash, those lanes spill their carried
+    fingerprint into it (aliased in→out like the table, so grid blocks
+    accumulate) and only roll back once the stash is full too.
+
+    Pipeline knobs (all default off, all bit-preserving):
+      * ``emulate``  — run the identical kernel schedule as a compiled XLA
+        ``lax.scan`` over the grid instead of ``pallas_call`` (the off-TPU
+        fast path; ops.py sets it automatically);
+      * ``schedule`` — the conflict-aware wave pre-pass
+        (``core/scheduling.py``): sort lanes wave-major by home bucket and
+        scatter ``placed`` back, cutting intra-batch rank races and
+        eviction rounds for contended batches;
+      * ``donate``   — donate the table/stash buffers to the call (zero-copy
+        update; the caller's input arrays are consumed).
+    """
+    fn = _insert_bulk_donated if donate else _insert_bulk_jit
+    return fn(table, hi, lo, fp_bits=fp_bits, n_buckets=n_buckets,
+              valid=valid, evict_rounds=evict_rounds, stash=stash,
+              block=block, interpret=interpret, emulate=emulate,
+              schedule=schedule)
 
 
 def insert_once(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
                 fp_bits: int, n_buckets=None, valid=None,
-                block: int = DEFAULT_BLOCK, interpret: bool = True
-                ) -> tuple[jax.Array, jax.Array]:
+                block: int = DEFAULT_BLOCK, interpret: bool = True,
+                emulate: bool = False) -> tuple[jax.Array, jax.Array]:
     """One optimistic insert round (no eviction) -> (new_table, placed).
 
     The PR-1 entry point, kept for callers that sweep the residue
@@ -348,4 +451,4 @@ def insert_once(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
     """
     return insert_bulk(table, hi, lo, fp_bits=fp_bits, n_buckets=n_buckets,
                        valid=valid, evict_rounds=0, block=block,
-                       interpret=interpret)
+                       interpret=interpret, emulate=emulate)

@@ -1,9 +1,20 @@
 """Jit'd public wrappers around the Pallas kernels.
 
-Backend dispatch: Pallas-TPU lowers only on TPU; on the CPU host (this
-container, tests) kernels run in ``interpret=True`` mode and large-shape
-callers fall back to the pure-jnp oracle (``ref.py``), which is what the
-dry-run compiles.  ``use_pallas='auto'|'always'|'never'`` controls this.
+Backend dispatch: Pallas-TPU lowers only on TPU.  Off TPU each kernel runs
+its **XLA grid emulation** — the identical kernel body compiled as a
+``lax.scan`` over the grid (``emulate=True`` on every kernel entry point) —
+so the "pallas" backend is a throughput configuration on CPU hosts too; the
+Pallas interpreter (``interpret=True`` without ``emulate``) remains
+available for kernel-fidelity debugging and is parity-tested bit-for-bit
+against the emulation.  Large-shape ``auto`` callers still fall back to the
+pure-jnp oracle (``ref.py``), which is what the dry-run compiles.
+``use_pallas='auto'|'always'|'never'`` controls the arms.
+
+Per-op BLOCK sizes come from ``autotune_block`` — the same VMEM footprint
+model ``kernel_vmem_bytes`` gives the 'auto' dispatch, inverted: pick the
+block that balances the [BLOCK, BLOCK] rank working set (cost grows with
+the block) against the per-block whole-table work and launch overhead
+(amortized by the block), subject to the op fitting the VMEM budget.
 
 The single dispatch predicate lives in ``_use_kernel`` — the seed had an
 operator-precedence bug (``A or (B and C) or D`` instead of
@@ -13,6 +24,8 @@ the kernel (regression-tested in tests/test_filter_ops.py).
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -21,7 +34,7 @@ from repro.kernels.delete import delete_bulk
 from repro.kernels.fingerprint import fingerprint_hash
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.insert import DEFAULT_EVICT_ROUNDS, insert_bulk, insert_once
-from repro.kernels.probe import probe
+from repro.kernels.probe import probe, probe_emulated, probe_multi
 from repro.kernels.stash import (DEFAULT_STASH_SLOTS, make_stash,
                                  stash_occupancy, stash_probe_ref,
                                  stash_spill_ref)
@@ -75,6 +88,57 @@ def kernel_vmem_bytes(op: str, *, table_bytes: int, block: int,
     raise ValueError(f"unknown filter kernel op {op!r}")
 
 
+# Pow2 block-size candidates for the autotuner.  128 is the TPU lane width
+# (smaller tiles waste the VPU); 8192 keeps the padded-batch overhead and
+# the key tiles bounded.
+_BLOCK_CANDIDATES = (128, 256, 512, 1024, 2048, 4096, 8192)
+
+
+@functools.lru_cache(maxsize=256)
+def autotune_block(op: str, *, table_bytes: int, evict_rounds: int = 0,
+                   stash_slots: int = 0, n_keys: int | None = None) -> int:
+    """Per-op kernel BLOCK from the ``kernel_vmem_bytes`` footprint model.
+
+    The fixed ``DEFAULT_BLOCK = 1024`` the kernels shipped with is the
+    wrong point for most shapes, in both directions:
+
+      * **probe** has no [BLOCK, BLOCK] rank term — its footprint is table
+        + O(BLOCK) — so the biggest block that fits the budget wins (fewer
+        grid launches, better key-tile amortization);
+      * **insert/delete** pay the rank compare, whose *total* work grows
+        linearly with the block (N lanes × BLOCK compares each), so the
+        smallest candidate wins — measured on the bench shapes, insert at
+        block 128 is ~5x block 1024.  One exception: a batch that fits
+        entirely inside a single budget-fitting block takes that block —
+        one launch, and a single-block insert reproduces the host
+        optimistic round table-for-table (the PR-1 parity contract).
+
+    Candidates are pow2 and must keep the op's ``kernel_vmem_bytes`` inside
+    ``VMEM_TABLE_BUDGET`` — the same model 'auto' dispatch budgets with, so
+    autotuned blocks can never pick a footprint dispatch would reject.
+    """
+    fits = [b for b in _BLOCK_CANDIDATES
+            if kernel_vmem_bytes(op, table_bytes=table_bytes, block=b,
+                                 evict_rounds=evict_rounds,
+                                 stash_slots=stash_slots)
+            <= VMEM_TABLE_BUDGET]
+    if not fits:
+        return _BLOCK_CANDIDATES[0]
+    if op == "probe":
+        return fits[-1]
+    if n_keys is not None:
+        whole = [b for b in fits if b >= n_keys]
+        if whole:
+            return whole[0]
+    return fits[0]
+
+
+def _emulate() -> bool:
+    """Off TPU, run kernels as their compiled XLA grid emulation (bit-for-
+    bit the pallas_call; ~100x the interpreter's throughput)."""
+    return not _on_tpu()
+
+
 def _use_kernel(use_pallas: str, *, vmem_bytes: int, n_keys: int) -> bool:
     """True when the Pallas kernel should run (vs the pure-jnp ref path).
 
@@ -103,19 +167,26 @@ def _pad_to(x: jax.Array, mult: int):
     return x, n
 
 
+def _unpad(x: jax.Array, n: int):
+    # Skip the slice when the batch needed no padding: an eager x[:n] is a
+    # dispatched device op, and on the hot lookup path it is pure overhead.
+    return x if x.shape[0] == n else x[:n]
+
+
 def hash_keys(hi: jax.Array, lo: jax.Array, *, fp_bits: int, n_buckets: int,
               use_pallas: str = "auto"):
     """(fp, i1, i2) via the fingerprint kernel (padded to the block size)."""
     if hi.shape[0] == 0 or not _use_kernel(use_pallas, vmem_bytes=0,
                                            n_keys=hi.shape[0]):
         return ref.fingerprint_ref(hi, lo, fp_bits=fp_bits, n_buckets=n_buckets)
-    block = 1024 if hi.shape[0] >= 1024 else hi.shape[0]
+    block = min(autotune_block("probe", table_bytes=0), hi.shape[0])
     hi_p, n = _pad_to(hi, block)
     lo_p, _ = _pad_to(lo, block)
     fp, i1, i2 = fingerprint_hash(hi_p, lo_p, fp_bits=fp_bits,
                                   n_buckets=n_buckets, block=block,
-                                  interpret=not _on_tpu())
-    return fp[:n], i1[:n], i2[:n]
+                                  interpret=not _on_tpu(),
+                                  emulate=_emulate())
+    return _unpad(fp, n), _unpad(i1, n), _unpad(i2, n)
 
 
 def filter_lookup(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
@@ -131,8 +202,9 @@ def filter_lookup(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
     """
     if hi.shape[0] == 0:
         return jnp.zeros((0,), jnp.bool_)
-    block = 1024 if hi.shape[0] >= 1024 else hi.shape[0]
     stash_slots = 0 if stash is None else stash.shape[1]
+    block = min(autotune_block("probe", table_bytes=table.size * 4,
+                               stash_slots=stash_slots), hi.shape[0])
     if not _use_kernel(use_pallas,
                        vmem_bytes=kernel_vmem_bytes(
                            "probe", table_bytes=table.size * 4, block=block,
@@ -148,14 +220,136 @@ def filter_lookup(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
     hi_p, n = _pad_to(hi, block)
     lo_p, _ = _pad_to(lo, block)
     hit = probe(table, hi_p, lo_p, fp_bits=fp_bits, n_buckets=n_buckets,
-                stash=stash, block=block, interpret=not _on_tpu())
-    return hit[:n]
+                stash=stash, block=block, interpret=not _on_tpu(),
+                emulate=_emulate())
+    return _unpad(hit, n)
+
+
+def filter_lookup_multi(tables: jax.Array, hi: jax.Array, lo: jax.Array, *,
+                        fp_bits: int, n_buckets=None, stashes=None,
+                        use_pallas: str = "auto") -> jax.Array:
+    """Bulk membership across K stacked generations -> bool[N].
+
+    ``tables``: uint32[K, buffer_buckets, bucket_size]; ``stashes``:
+    optional uint32[K, 2, S]; ``n_buckets`` is the generations' shared
+    ACTIVE bucket count.  Kernel arm: ONE fused ``probe_multi`` launch
+    whose grid spans all K generations (keys hashed once).  Ref arm: the
+    per-generation probe/stash loop — the same answers, 2·K hash passes.
+    """
+    if hi.shape[0] == 0:
+        return jnp.zeros((0,), jnp.bool_)
+    k = tables.shape[0]
+    per_table_bytes = (tables.size // max(k, 1)) * 4
+    stash_slots = 0 if stashes is None else stashes.shape[2]
+    block = min(autotune_block("probe", table_bytes=per_table_bytes,
+                               stash_slots=stash_slots), hi.shape[0])
+    if not _use_kernel(use_pallas,
+                       vmem_bytes=kernel_vmem_bytes(
+                           "probe", table_bytes=per_table_bytes, block=block,
+                           stash_slots=stash_slots),
+                       n_keys=hi.shape[0]):
+        nb = tables.shape[1] if n_buckets is None else n_buckets
+        hit = jnp.zeros(hi.shape, jnp.bool_)
+        for g in range(k):
+            hit = hit | ref.probe_ref(tables[g], hi, lo, fp_bits=fp_bits,
+                                      n_buckets=nb)
+            if stashes is not None:
+                hit = hit | stash_probe_ref(stashes[g], hi, lo,
+                                            fp_bits=fp_bits, n_buckets=nb)
+        return hit
+    hi_p, n = _pad_to(hi, block)
+    lo_p, _ = _pad_to(lo, block)
+    hit = probe_multi(tables, hi_p, lo_p, fp_bits=fp_bits,
+                      n_buckets=n_buckets, stashes=stashes, block=block,
+                      interpret=not _on_tpu(), emulate=_emulate())
+    return _unpad(hit, n)
+
+
+@functools.lru_cache(maxsize=256)
+def _probe_plan(fp_bits: int, table_shape: tuple, stash_slots: int):
+    """Pinned (block, emulate) for a table shape — the per-call python of
+    re-deriving them is measurable on the serving lookup path."""
+    table_bytes = table_shape[0] * table_shape[1] * 4
+    block = autotune_block("probe", table_bytes=table_bytes,
+                           stash_slots=stash_slots)
+    return block, _emulate()
+
+
+def probe_dispatch(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
+                   fp_bits: int, n_buckets=None, stash=None) -> jax.Array:
+    """``filter_lookup`` with the kernel arm pinned (use_pallas='always'),
+    skipping the per-call block/VMEM re-derivation — the one-jit-dispatch
+    fast path ``FilterOps.lookup`` takes on the pallas backend."""
+    if hi.shape[0] == 0:
+        return jnp.zeros((0,), jnp.bool_)
+    stash_slots = 0 if stash is None else stash.shape[1]
+    block, emul = _probe_plan(fp_bits, table.shape, stash_slots)
+    if emul:
+        # No padding needed: the emulated body is gridless.
+        if n_buckets is None:
+            n_buckets = table.shape[0]
+        return probe_emulated(table, hi, lo, n_buckets, stash,
+                              fp_bits=fp_bits)
+    b = min(block, hi.shape[0])
+    hi_p, n = _pad_to(hi, b)
+    lo_p, _ = _pad_to(lo, b)
+    # not emul => on TPU (emulation is exactly the off-TPU arm), so the
+    # pallas_call compiles natively.
+    hit = probe(table, hi_p, lo_p, fp_bits=fp_bits, n_buckets=n_buckets,
+                stash=stash, block=b, interpret=False)
+    return _unpad(hit, n)
+
+
+def multi_prober(tables: jax.Array, *, fp_bits: int, n_buckets=None,
+                 stashes=None, use_pallas: str = "auto"):
+    """Resolve ``filter_lookup_multi``'s dispatch ONCE for a fixed
+    generation stack -> callable ``(hi, lo) -> bool[N]``.
+
+    The streaming ring probes the same K tables for every chunk of a
+    batch; re-deriving the block size, VMEM budget, and dispatch arm per
+    chunk is measurable overhead on the serving hot path (~15% of a
+    4096-key chunk).  The closure pins them, leaving one jitted
+    ``probe_multi`` dispatch (plus padding when the tail chunk needs it)
+    per call.
+    """
+    k = tables.shape[0]
+    per_table_bytes = (tables.size // max(k, 1)) * 4
+    stash_slots = 0 if stashes is None else stashes.shape[2]
+    block = autotune_block("probe", table_bytes=per_table_bytes,
+                           stash_slots=stash_slots)
+    kernel = _use_kernel(use_pallas,
+                         vmem_bytes=kernel_vmem_bytes(
+                             "probe", table_bytes=per_table_bytes,
+                             block=block, stash_slots=stash_slots),
+                         n_keys=block)
+    if not kernel:
+        def ref_probe(hi, lo):
+            return filter_lookup_multi(tables, hi, lo, fp_bits=fp_bits,
+                                       n_buckets=n_buckets, stashes=stashes,
+                                       use_pallas="never")
+        return ref_probe
+    interp = not _on_tpu()
+    emul = _emulate()
+
+    def kernel_probe(hi, lo):
+        if hi.shape[0] == 0:
+            return jnp.zeros((0,), jnp.bool_)
+        b = min(block, hi.shape[0])
+        hi_p, n = _pad_to(hi, b)
+        lo_p, _ = _pad_to(lo, b)
+        hit = probe_multi(tables, hi_p, lo_p, fp_bits=fp_bits,
+                          n_buckets=n_buckets, stashes=stashes, block=b,
+                          interpret=interp, emulate=emul)
+        return _unpad(hit, n)
+
+    return kernel_probe
 
 
 def filter_insert(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
                   fp_bits: int, n_buckets=None, valid=None,
                   evict_rounds: int = 0, stash=None, max_disp: int = 500,
-                  use_pallas: str = "auto"):
+                  use_pallas: str = "auto", schedule: bool = False,
+                  donate: bool = False):
     """Fused bulk insert -> (new_table, placed bool[N]), or
     (new_table, new_stash, placed) when an overflow ``stash`` is attached.
 
@@ -182,8 +376,11 @@ def filter_insert(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
                                                         empty_ok)
     if valid is None:
         valid = jnp.ones(hi.shape, bool)
-    block = 1024 if hi.shape[0] >= 1024 else hi.shape[0]
     stash_slots = 0 if stash is None else stash.shape[1]
+    block = min(autotune_block("insert", table_bytes=table.size * 4,
+                               evict_rounds=evict_rounds,
+                               stash_slots=stash_slots,
+                               n_keys=hi.shape[0]), hi.shape[0])
     if not _use_kernel(use_pallas,
                        vmem_bytes=kernel_vmem_bytes(
                            "insert", table_bytes=table.size * 4, block=block,
@@ -212,18 +409,22 @@ def filter_insert(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
         new_table, ok = insert_bulk(table, hi_p, lo_p, fp_bits=fp_bits,
                                     n_buckets=n_buckets, valid=valid_p,
                                     evict_rounds=evict_rounds,
-                                    block=block, interpret=not _on_tpu())
-        return new_table, ok[:n]
+                                    block=block, interpret=not _on_tpu(),
+                                    emulate=_emulate(), schedule=schedule,
+                                    donate=donate)
+        return new_table, _unpad(ok, n)
     new_table, new_stash, ok = insert_bulk(
         table, hi_p, lo_p, fp_bits=fp_bits, n_buckets=n_buckets,
         valid=valid_p, evict_rounds=evict_rounds, stash=stash, block=block,
-        interpret=not _on_tpu())
-    return new_table, new_stash, ok[:n]
+        interpret=not _on_tpu(), emulate=_emulate(), schedule=schedule,
+        donate=donate)
+    return new_table, new_stash, _unpad(ok, n)
 
 
 def filter_delete(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
                   fp_bits: int, n_buckets=None, valid=None,
-                  use_pallas: str = "auto") -> tuple[jax.Array, jax.Array]:
+                  use_pallas: str = "auto", donate: bool = False
+                  ) -> tuple[jax.Array, jax.Array]:
     """Fused bulk delete -> (new_table, deleted bool[N]).
 
     Device-side first-match-slot clearing via ``kernels.delete``; the
@@ -236,7 +437,8 @@ def filter_delete(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
         return table, jnp.zeros((0,), jnp.bool_)
     if valid is None:
         valid = jnp.ones(hi.shape, bool)
-    block = 1024 if hi.shape[0] >= 1024 else hi.shape[0]
+    block = min(autotune_block("delete", table_bytes=table.size * 4,
+                               n_keys=hi.shape[0]), hi.shape[0])
     if not _use_kernel(use_pallas,
                        vmem_bytes=kernel_vmem_bytes(
                            "delete", table_bytes=table.size * 4, block=block),
@@ -248,8 +450,9 @@ def filter_delete(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
     valid_p, _ = _pad_to(valid, block)   # pads False: never touches the table
     new_table, ok = delete_bulk(table, hi_p, lo_p, fp_bits=fp_bits,
                                 n_buckets=n_buckets, valid=valid_p,
-                                block=block, interpret=not _on_tpu())
-    return new_table, ok[:n]
+                                block=block, interpret=not _on_tpu(),
+                                emulate=_emulate(), donate=donate)
+    return new_table, _unpad(ok, n)
 
 
 def attention(q, k, v, *, causal: bool = True, window: int | None = None,
@@ -279,9 +482,9 @@ def attention(q, k, v, *, causal: bool = True, window: int | None = None,
                                    key_positions=key_positions)
 
 
-__all__ = ["hash_keys", "filter_lookup", "filter_insert", "filter_delete",
-           "attention", "fingerprint_hash", "probe", "insert_once",
-           "insert_bulk", "delete_bulk", "flash_attention",
-           "kernel_vmem_bytes", "VMEM_TABLE_BUDGET",
-           "DEFAULT_EVICT_ROUNDS", "DEFAULT_STASH_SLOTS", "make_stash",
-           "stash_occupancy"]
+__all__ = ["hash_keys", "filter_lookup", "filter_lookup_multi",
+           "filter_insert", "filter_delete", "attention", "fingerprint_hash",
+           "probe", "probe_multi", "insert_once", "insert_bulk",
+           "delete_bulk", "flash_attention", "kernel_vmem_bytes",
+           "autotune_block", "VMEM_TABLE_BUDGET", "DEFAULT_EVICT_ROUNDS",
+           "DEFAULT_STASH_SLOTS", "make_stash", "stash_occupancy"]

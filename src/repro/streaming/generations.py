@@ -42,8 +42,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import filter as jfilter
-from repro.core.chunking import key_chunks, pow2_at_least
+from repro.core.chunking import (collect_chunk_results, key_chunks,
+                                 pow2_at_least)
 from repro.core.filter_ops import Backend, FilterOps, evict_rounds_for_load
+from repro.core.scheduling import dedupe_keys
 from repro.kernels.stash import DEFAULT_STASH_SLOTS, stash_occupancy
 from repro.streaming.stash import OverflowStash
 
@@ -62,6 +64,16 @@ class GenerationConfig:
     o_max: float = 0.85              # rotate when the active table fills past
     stash_high: float = 0.5          # ... or the active stash fills past
     ttl: Optional[float] = None      # seconds a generation stays live
+    # Conflict-aware wave scheduling of insert batches + zero-copy buffer
+    # donation (the ring owns its pool buffers and never reuses a pre-op
+    # table) — see core/scheduling.py and FilterOps.
+    schedule: bool = True
+    donate: bool = True
+    # Host-side lookup dedup (probe one lane per distinct key in a batch).
+    # Off by default: all-unique batches would pay the np.unique sort for
+    # nothing; dedup-window streams — where repeats ARE the workload —
+    # should turn it on.
+    dedupe_lookups: bool = False
 
     def __post_init__(self):
         # Unlike OcfConfig (where stash_slots=0 means "classic OCF, grow on
@@ -84,7 +96,8 @@ class GenerationConfig:
         rounds = (self.evict_rounds if self.evict_rounds is not None
                   else evict_rounds_for_load(self.o_max))
         return FilterOps(fp_bits=self.fp_bits, backend=self.backend,
-                         evict_rounds=rounds)
+                         evict_rounds=rounds, schedule=self.schedule,
+                         donate=self.donate)
 
 
 @dataclasses.dataclass
@@ -162,6 +175,9 @@ class GenerationalFilter:
         self.gens: list[_Generation] = []
         self.stats = GenStats()
         self._last_now: Optional[float] = None
+        # identity key -> (prober, source-array refs) for the fused
+        # fan-out — see _fanout_prober.
+        self._prober_cache: dict = {}
         self._spawn(self._now(now))
 
     # --------------------------------------------------------- plumbing --
@@ -302,19 +318,11 @@ class GenerationalFilter:
             ns.append(n)
             count, occ = self._control_read()
             self.stats.spills += occ - prev_occ
-        failed: list[np.ndarray] = []
-        if oks:
-            ok_all = np.asarray(jnp.stack(oks))   # one transfer, all chunks
-            off = 0
-            for i, n in enumerate(ns):
-                bad = np.flatnonzero(~ok_all[i, :n]) + off
-                if bad.size:
-                    failed.append(bad)
-                off += n
-        if failed:
+        idx = (np.flatnonzero(~collect_chunk_results(oks, ns)) if oks
+               else np.zeros((0,), np.intp))   # one transfer, all chunks
+        if idx.size:
             # Even the stash overflowed: rotate early and retry ONCE in the
             # fresh generation (the streaming analogue of emergency grow).
-            idx = np.concatenate(failed)
             self.stats.rotate_retries += idx.size
             self.rotate(now)
             off = 0
@@ -334,6 +342,35 @@ class GenerationalFilter:
         gen.state = state
         gen.stash.array = stash_arr
         return ok
+
+    def _fanout_prober(self, states, stashes):
+        """Cached fused fan-out closure over the live generations' tables.
+
+        Stacking K tables + stashes into the fused kernel's [K, ...] inputs
+        is an O(K · table_bytes) device copy; the generation set only
+        changes on insert/rotate/advance, while a serving workload may
+        probe many batches in between.  The cache keys on the live arrays'
+        identities (strong refs to the keyed arrays ride along so an id
+        can't be recycled while the key is alive) and rebuilds lazily on
+        any state change — including donation, which always rebinds
+        ``gen.state`` to a fresh array.
+        """
+        key = tuple((id(s.table), id(a)) for s, a in zip(states, stashes))
+        hit = self._prober_cache.get(key)
+        if hit is not None:
+            return hit[0]
+        tables = jnp.stack([s.table for s in states])
+        stash_stack = jnp.stack(stashes)
+        prober = self.ops.fanout_prober(tables, stash_stack,
+                                        n_buckets=states[0].n_buckets)
+        if len(self._prober_cache) >= 4:
+            # A dict (not one slot) because the serving path alternates
+            # lookup() [all live gens] with lookup_active() [active only]
+            # per request — one slot would thrash and re-stack every call.
+            self._prober_cache.pop(next(iter(self._prober_cache)))
+        self._prober_cache[key] = (prober, [s.table for s in states],
+                                   list(stashes))
+        return prober
 
     def lookup(self, keys, now: Optional[float] = None) -> np.ndarray:
         """Membership across every live generation -> bool[N]."""
@@ -357,14 +394,30 @@ class GenerationalFilter:
         live = self._live(now)
         if active_only:
             live = [g for g in live if g is self.gens[-1]]
-        out = np.zeros(keys.size, bool)
         if not live:
-            return out
+            return np.zeros(keys.size, bool)
+        if self.config.dedupe_lookups:
+            uniq, inverse = dedupe_keys(keys)
+        else:
+            uniq, inverse = keys, None
         states = tuple(g.state for g in live)
         stashes = tuple(g.stash.array for g in live)
-        off = 0
-        for hi, lo, _valid, n in self._chunks(keys):
-            hit = _multi_probe(self.ops, states, stashes, hi, lo)
-            out[off:off + n] = np.asarray(hit)[:n]
-            off += n
-        return out
+        # pallas: ONE fused kernel per chunk, its grid spanning every live
+        # generation (keys hashed once).  jnp: the unrolled per-generation
+        # probe loop.  Either way every chunk's hits queue on device and
+        # come back in one stacked transfer.
+        fused = (self.ops.resolve_bytes(
+            states[0].table.size * 4,
+            stash_slots=self.config.stash_slots) == "pallas")
+        if fused:
+            prober = self._fanout_prober(states, stashes)
+        hits, ns = [], []
+        for hi, lo, _valid, n in self._chunks(uniq, with_valid=False):
+            if fused:
+                hit = prober(hi, lo)
+            else:
+                hit = _multi_probe(self.ops, states, stashes, hi, lo)
+            hits.append(hit)
+            ns.append(n)
+        out = collect_chunk_results(hits, ns)
+        return out[inverse] if inverse is not None else out

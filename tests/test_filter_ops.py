@@ -124,9 +124,17 @@ def test_ocf_pallas_backend_dispatches_through_kernels(rng, monkeypatch):
     real_probe, real_insert = kops.probe, kops.insert_bulk
     real_delete = kops.delete_bulk
 
+    real_probe_emulated = kops.probe_emulated
+
     def probe_spy(*a, **kw):
         calls["probe"] += 1
         return real_probe(*a, **kw)
+
+    def probe_emulated_spy(*a, **kw):
+        # the off-TPU fast path FilterOps.lookup takes (same kernel body,
+        # XLA-compiled — see kernels/probe.py::probe_emulated)
+        calls["probe"] += 1
+        return real_probe_emulated(*a, **kw)
 
     def insert_spy(*a, **kw):
         calls["insert"] += 1
@@ -141,6 +149,7 @@ def test_ocf_pallas_backend_dispatches_through_kernels(rng, monkeypatch):
         raise AssertionError("pallas backend fell back to the scan path")
 
     monkeypatch.setattr(kops, "probe", probe_spy)
+    monkeypatch.setattr(kops, "probe_emulated", probe_emulated_spy)
     monkeypatch.setattr(kops, "insert_bulk", insert_spy)
     monkeypatch.setattr(kops, "delete_bulk", delete_spy)
     from repro.core import filter_ops as fops_mod
@@ -271,7 +280,8 @@ def test_serving_backend_threads_through(rng):
     from repro.serving.kvcache import PrefixCacheIndex
     idx = PrefixCacheIndex(backend="jnp")
     assert idx.ocf.config.backend == "jnp"
-    assert idx.ocf.ops == FilterOps(fp_bits=16, max_disp=500, backend="jnp")
+    assert idx.ocf.ops == FilterOps(fp_bits=16, max_disp=500, backend="jnp",
+                                    schedule=True, donate=True)
     cfg = OcfConfig(capacity=4096, backend="auto")
     idx2 = PrefixCacheIndex(config=cfg, backend="pallas")
     assert idx2.ocf.config.backend == "pallas"

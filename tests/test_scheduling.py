@@ -1,0 +1,272 @@
+"""Conflict-aware batch scheduling + zero-copy kernel pipeline (ISSUE 5).
+
+Covers the acceptance criteria of the scheduling/pipeline PR:
+  * the wave pre-pass (`core/scheduling.py`) emits conflict-free waves,
+    keeps same-bucket lanes in their original relative order, and splits
+    in-batch duplicate keys across waves;
+  * scheduled dispatch is invisible to results: membership + conservation
+    parity vs unscheduled dispatch on contended batches, and single-lane
+    residue chains stay **bit-for-bit** identical to the sequential
+    stash oracle (`PyStashFilter`) through the whole scheduled FilterOps
+    path — including spill and stash-full rollback;
+  * the XLA grid emulation (`emulate=True`) is bit-for-bit the Pallas
+    interpreter for insert/probe/delete and the fused multi-generation
+    probe;
+  * lookup dedup answers exactly like the raw batch (duplicates included);
+  * buffer donation consumes the caller's table (zero-copy contract) and
+    produces the same results as the undonated call;
+  * empty batches are safe through every scheduled/deduped entry point.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import filter as jf
+from repro.core import hashing
+from repro.core.filter_ops import FilterOps
+from repro.core.ocf import OCF, OcfConfig
+from repro.core.scheduling import (conflict_waves, dedupe_keys,
+                                   dispatch_order, wave_count)
+from repro.kernels import ops as kops
+from repro.kernels.delete import delete_bulk
+from repro.kernels.insert import insert_bulk
+from repro.kernels.probe import probe, probe_multi
+from repro.kernels.stash import make_stash, stash_occupancy
+from repro.streaming import PyStashFilter
+
+from conftest import random_keys
+
+pytestmark = pytest.mark.tier1
+
+
+def _pair(keys):
+    hi, lo = hashing.key_to_u32_pair_np(np.asarray(keys, dtype=np.uint64))
+    return jnp.asarray(hi), jnp.asarray(lo)
+
+
+# ------------------------------------------------------- wave pre-pass ----
+
+
+def test_waves_are_conflict_free_and_order_preserving(rng):
+    """Each wave holds at most one lane per bucket; same-bucket lanes keep
+    their original relative order; invalid lanes sort last."""
+    n, n_buckets = 1024, 64                    # dense conflicts
+    keys = random_keys(rng, n)
+    hi, lo = _pair(keys)
+    valid = jnp.asarray(rng.rand(n) < 0.9)
+    i1 = np.asarray(hashing.index_hash_dyn(hi, lo, n_buckets), dtype=np.int64)
+    perm, inv = dispatch_order(hi, lo, valid, n_buckets=n_buckets)
+    perm, inv = np.asarray(perm), np.asarray(inv)
+    v = np.asarray(valid)
+    # a permutation, and inv really inverts it
+    assert sorted(perm.tolist()) == list(range(n))
+    np.testing.assert_array_equal(perm[inv], np.arange(n))
+    # invalid lanes are all parked at the end
+    n_valid = int(v.sum())
+    assert not v[perm[n_valid:]].any() and v[perm[:n_valid]].all()
+    # waves: walk the dispatch order; a bucket repeating within one wave
+    # would mean the wave is not conflict-free
+    waves = np.asarray(conflict_waves(jnp.asarray(i1), valid))
+    w_sorted = waves[perm[:n_valid]]
+    b_sorted = i1[perm[:n_valid]]
+    assert (np.diff(w_sorted) >= 0).all(), "dispatch must be wave-major"
+    for w in range(int(w_sorted.max()) + 1):
+        bw = b_sorted[w_sorted == w]
+        assert len(np.unique(bw)) == len(bw), f"wave {w} has a conflict"
+    # same-bucket lanes keep original relative order (the property that
+    # makes scheduling invisible to rank-based placement)
+    pos = np.empty(n, dtype=np.int64)
+    pos[perm] = np.arange(n)
+    for b in np.unique(i1[v]):
+        lanes = np.flatnonzero(v & (i1 == b))
+        assert (np.diff(pos[lanes]) > 0).all()
+
+
+def test_duplicate_keys_split_across_waves(rng):
+    """In-batch repeats of one key (same bucket, same fp) are the repeats
+    the scheduler deduplicates: k copies land in k distinct waves."""
+    key = random_keys(rng, 1)
+    keys = np.repeat(key, 5)
+    hi, lo = _pair(keys)
+    valid = jnp.ones((5,), bool)
+    i1 = hashing.index_hash_dyn(hi, lo, 64)
+    waves = np.asarray(conflict_waves(i1, valid))
+    np.testing.assert_array_equal(np.sort(waves), np.arange(5))
+    assert int(wave_count(i1, valid)) == 5
+    # all-distinct buckets -> a single wave
+    spread = random_keys(rng, 32)
+    shi, slo = _pair(spread)
+    si1 = hashing.index_hash_dyn(shi, slo, 1 << 20)
+    assert int(wave_count(si1, jnp.ones((32,), bool))) == 1
+
+
+# --------------------------------------------- scheduled-dispatch parity --
+
+
+def test_scheduled_vs_unscheduled_membership_and_conservation(rng):
+    """A contended spill batch lands the same keys with the same totals
+    whether or not the wave pre-pass reorders the dispatch (duplicates in
+    the batch included)."""
+    keys = random_keys(rng, 896)
+    keys = np.concatenate([keys, keys[:128]])    # in-batch duplicates
+    hi, lo = _pair(keys)                         # 1024 keys, block multiple
+    table = jnp.zeros((288, 4), jnp.uint32)      # 1024 / 1152 slots = 0.89
+    outs = {}
+    for sched in (False, True):
+        t, stash, ok = insert_bulk(table, hi, lo, fp_bits=16,
+                                   evict_rounds=64, stash=make_stash(256),
+                                   block=128, emulate=True, schedule=sched)
+        outs[sched] = (np.asarray(t), np.asarray(stash), np.asarray(ok))
+    for sched, (t, stash, ok) in outs.items():
+        assert ok.all(), f"stash must absorb the storm (schedule={sched})"
+    # conservation: same number of resident + stashed fingerprints
+    assert ((outs[False][0] != 0).sum() + (outs[False][1][0] != 0).sum()
+            == (outs[True][0] != 0).sum() + (outs[True][1][0] != 0).sum()
+            == keys.size)
+    # membership parity probe-for-probe (including false positives)
+    probes = np.concatenate([keys, random_keys(rng, 4000)])
+    phi, plo = _pair(probes)
+    h0 = kops.filter_lookup(jnp.asarray(outs[False][0]), phi, plo,
+                            fp_bits=16, stash=jnp.asarray(outs[False][1]),
+                            use_pallas="always")
+    h1 = kops.filter_lookup(jnp.asarray(outs[True][0]), phi, plo,
+                            fp_bits=16, stash=jnp.asarray(outs[True][1]),
+                            use_pallas="always")
+    np.testing.assert_array_equal(np.asarray(h0)[:keys.size],
+                                  np.asarray(h1)[:keys.size])
+    assert np.asarray(h0)[:keys.size].all()
+
+
+def test_scheduled_single_lane_residues_bit_for_bit_oracle(rng):
+    """One key per batch through the FULL scheduled pipeline (FilterOps
+    insert_spill: wave pre-pass + emulated kernel + spill + rollback) ==
+    the sequential stash oracle, table and stash bit-for-bit."""
+    n_buckets, bs, rounds, slots = 64, 4, 8, 16
+    oracle = PyStashFilter(n_buckets=n_buckets, bucket_size=bs, fp_bits=16,
+                           evict_rounds=rounds, stash_slots=slots)
+    fops = FilterOps(fp_bits=16, backend="pallas", evict_rounds=rounds,
+                     schedule=True)
+    state = jf.make_state(n_buckets, bs)
+    stash = make_stash(slots)
+    keys = random_keys(rng, 300)
+    ok_k, ok_o = [], []
+    for k in keys:
+        hi, lo = _pair(np.array([k], dtype=np.uint64))
+        state, stash, ok = fops.insert_spill(state, stash, hi, lo)
+        ok_k.append(bool(np.asarray(ok)[0]))
+        ok_o.append(oracle.insert(int(k)))
+    np.testing.assert_array_equal(np.array(ok_k), np.array(ok_o))
+    np.testing.assert_array_equal(np.asarray(state.table), oracle.table)
+    np.testing.assert_array_equal(np.asarray(stash), oracle.stash_array())
+    assert not all(ok_k), "stash-full rollback must have been exercised"
+    assert int(state.count) == int((np.asarray(state.table) != 0).sum())
+
+
+# ------------------------------------------------- emulation bit-parity ---
+
+
+def test_emulation_bit_for_bit_vs_interpreter(rng):
+    """The XLA grid emulation IS the kernel: insert (multi-block, stash),
+    probe (stash), delete, and the fused multi-generation probe all match
+    the Pallas interpreter bit-for-bit."""
+    keys = random_keys(rng, 1024)
+    hi, lo = _pair(keys)
+    table = jnp.zeros((128, 4), jnp.uint32)      # heavy contention
+    kw = dict(fp_bits=16, evict_rounds=16, block=256)
+    ti, si, oki = insert_bulk(table, hi, lo, **kw, stash=make_stash(64),
+                              interpret=True)
+    te, se, oke = insert_bulk(table, hi, lo, **kw, stash=make_stash(64),
+                              emulate=True)
+    np.testing.assert_array_equal(np.asarray(ti), np.asarray(te))
+    np.testing.assert_array_equal(np.asarray(si), np.asarray(se))
+    np.testing.assert_array_equal(np.asarray(oki), np.asarray(oke))
+    assert int(stash_occupancy(se)) > 0, "workload must exercise the stash"
+    hi2, lo2 = _pair(np.concatenate([keys, random_keys(rng, 1024)]))
+    p_i = probe(ti, hi2, lo2, fp_bits=16, stash=si, block=256,
+                interpret=True)
+    p_e = probe(te, hi2, lo2, fp_bits=16, stash=se, block=256, emulate=True)
+    np.testing.assert_array_equal(np.asarray(p_i), np.asarray(p_e))
+    d_i = delete_bulk(ti, hi, lo, fp_bits=16, block=256, interpret=True)
+    d_e = delete_bulk(te, hi, lo, fp_bits=16, block=256, emulate=True)
+    np.testing.assert_array_equal(np.asarray(d_i[0]), np.asarray(d_e[0]))
+    np.testing.assert_array_equal(np.asarray(d_i[1]), np.asarray(d_e[1]))
+    tables = jnp.stack([ti, jnp.asarray(d_i[0])])
+    stashes = jnp.stack([si, make_stash(64)])
+    m_i = probe_multi(tables, hi2, lo2, fp_bits=16, stashes=stashes,
+                      block=256, interpret=True)
+    m_e = probe_multi(tables, hi2, lo2, fp_bits=16, stashes=stashes,
+                      block=256, emulate=True)
+    np.testing.assert_array_equal(np.asarray(m_i), np.asarray(m_e))
+
+
+# ------------------------------------------------------------- dedup ------
+
+
+def test_lookup_dedup_answers_match_raw_batch(rng):
+    """OCF.lookup's dedup pre-pass: a batch with heavy repeats answers
+    exactly like the same batch probed lane-for-lane."""
+    base = random_keys(rng, 500)
+    ocf = OCF(OcfConfig(capacity=4096, backend="pallas",
+                        dedupe_lookups=True))
+    ocf.insert(base)
+    probes = rng.choice(np.concatenate([base, random_keys(rng, 500)]),
+                        size=6000, replace=True)
+    got = ocf.lookup(probes)
+    uniq, inverse = dedupe_keys(probes)
+    assert uniq.size < probes.size, "workload must actually dedupe"
+    want = ocf.lookup(uniq)[inverse]             # uniq batch: no dedup gain
+    np.testing.assert_array_equal(got, want)
+    member = np.isin(probes, base)
+    assert got[member].all(), "no false negatives through the dedup path"
+
+
+# ---------------------------------------------------------- donation ------
+
+
+def test_donation_consumes_input_and_matches_undonated(rng):
+    """donate=True: same results, and the caller's table buffer is consumed
+    (the zero-copy contract — reusing a donated buffer must fail loudly)."""
+    keys = random_keys(rng, 2000)
+    hi, lo = _pair(keys)
+    st_keep = jf.make_state(1024, 4)
+    fops = FilterOps(fp_bits=16, backend="pallas")
+    fops_d = FilterOps(fp_bits=16, backend="pallas", donate=True)
+    out_keep, ok_keep = fops.insert(st_keep, hi, lo)
+    st_don = jf.make_state(1024, 4)
+    donated_table = st_don.table
+    out_don, ok_don = fops_d.insert(st_don, hi, lo)
+    np.testing.assert_array_equal(np.asarray(out_keep.table),
+                                  np.asarray(out_don.table))
+    np.testing.assert_array_equal(np.asarray(ok_keep), np.asarray(ok_don))
+    assert donated_table.is_deleted(), "donated input must be consumed"
+    assert not st_keep.table.is_deleted()
+    # the end-to-end owners (OCF / generation ring) stay healthy
+    ocf = OCF(OcfConfig(capacity=4096, backend="pallas"))  # donate=True
+    ocf.insert(keys)
+    assert ocf.lookup(keys).all()
+    ocf.delete(keys[:500])
+    assert ocf.lookup(keys[500:]).all()
+
+
+# ------------------------------------------------------------- guards -----
+
+
+def test_empty_batches_through_scheduled_pipeline(rng):
+    e = jnp.zeros((0,), jnp.uint32)
+    fops = FilterOps(fp_bits=16, backend="pallas", schedule=True,
+                     donate=True)
+    st = jf.make_state(64, 4)
+    st2, ok = fops.insert(st, e, e)
+    assert np.asarray(ok).shape == (0,) and int(st2.count) == 0
+    st3, stash, ok2 = fops.insert_spill(st, make_stash(16), e, e)
+    assert np.asarray(ok2).shape == (0,)
+    empty = np.zeros((0,), np.uint64)
+    uniq, inverse = dedupe_keys(empty)
+    assert uniq.size == 0 and inverse is None
+    assert int(wave_count(jnp.zeros((0,), jnp.int32),
+                          jnp.zeros((0,), bool))) == 0
+    ocf = OCF(OcfConfig(capacity=1024, backend="pallas"))
+    assert ocf.lookup(empty).shape == (0,)
+    perm, inv = dispatch_order(e, e, jnp.zeros((0,), bool), n_buckets=64)
+    assert np.asarray(perm).shape == (0,) and np.asarray(inv).shape == (0,)
