@@ -19,6 +19,8 @@ from __future__ import annotations
 import functools
 import json
 import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -294,6 +296,32 @@ def ocf_insert_rows(rng, *, n=KEYSTORE_BATCH):
                   "ocf_insert_burst_keys_per_s": kps}
 
 
+def distributed_rows():
+    """Routed vs host-loop sharded writes (PR 6) — run in a subprocess.
+
+    ``distributed_bench.py`` forces a 4-device host platform, which must
+    happen before jax initializes; this process already holds a 1-device
+    jax, so the benchmark runs out-of-process and hands back its JSON
+    (last stdout line).  The routed/hostloop pairing is the PR-6
+    acceptance comparison: same per-shard kernels, different dispatch
+    architecture — ``scripts/bench_gate.py`` enforces routed >= hostloop
+    on the insert row in addition to the usual regression threshold.
+    """
+    script = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "distributed_bench.py")
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    out = subprocess.run([sys.executable, script], capture_output=True,
+                         text=True, timeout=1200, env=env)
+    if out.returncode != 0:
+        raise RuntimeError(
+            f"distributed_bench failed:\n{out.stderr[-3000:]}")
+    results = json.loads(out.stdout.strip().splitlines()[-1])
+    rows = [(k, results.get(k.replace("_keys_per_s", "_us_per_key"), 0.0), v)
+            for k, v in results.items() if k.endswith("_keys_per_s")]
+    return rows, results
+
+
 def run(json_path: str | None = JSON_PATH):
     rng = np.random.RandomState(0)
     rows, results = [], {"backend_default": jax.default_backend()}
@@ -302,9 +330,10 @@ def run(json_path: str | None = JSON_PATH):
         r, res = fn(rng)
         rows += r
         results.update(res)
-    r, res = autotune_rows()
-    rows += r
-    results.update(res)
+    for fn in (autotune_rows, distributed_rows):
+        r, res = fn()
+        rows += r
+        results.update(res)
     if json_path:
         with open(json_path, "w") as f:
             json.dump(results, f, indent=2, sort_keys=True)

@@ -1,8 +1,10 @@
 """Distributed membership service: OCF shards on a JAX mesh (paper §I-B).
 
-The paper's Cassandra-cluster scenario: keys are owned by shards; a batched
-membership query is routed shard-to-shard with one capacity-bounded
-all_to_all and answered by local VMEM probes.  Run on 8 virtual devices:
+The paper's Cassandra-cluster scenario: keys are owned by shards; batched
+inserts, lookups, and verified deletes are all routed shard-to-shard with
+one capacity-bounded all_to_all and run by the owner's local data plane —
+writes resolve their eviction chains and stash spills on-device inside
+shard_map (PR 6), no host round-trips.  Run on 8 virtual devices:
 
     PYTHONPATH=src python examples/distributed_membership.py
 """
@@ -15,7 +17,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import distributed as dist
-from repro.core import filter as jf
 from repro.core import hashing
 
 N_SHARDS, N_BUCKETS = 8, 4096
@@ -29,19 +30,18 @@ rng = np.random.RandomState(0)
 keys = rng.randint(0, 2 ** 63, size=32768, dtype=np.int64).astype(np.uint64)
 hi, lo = hashing.key_to_u32_pair_np(keys)
 
-# Build each shard's filter from the keys it owns (host-side control plane).
+# Routed insert: every key rides the all_to_all to its owner shard, which
+# runs the conflict-aware scheduled insert on its table slice on-device —
+# the host never partitions keys or swaps tables (that was the pre-PR-6
+# idiom; see ARCHITECTURE.md "Distributed write path").
 owner = np.asarray(hashing.owner_shard_np(hi, lo, N_SHARDS))
-tables = np.zeros((N_SHARDS, N_BUCKETS, 4), np.uint32)
-for s in range(N_SHARDS):
-    m = owner == s
-    fs = jf.make_state(N_BUCKETS, 4)
-    fs, ok = jf.bulk_insert_hybrid(fs, jnp.asarray(hi[m]), jnp.asarray(lo[m]),
-                                   fp_bits=16)
-    assert bool(np.asarray(ok).all())
-    tables[s] = np.asarray(fs.table)
-state = dist.ShardedFilterState(tables=jnp.asarray(tables))
-print(f"{N_SHARDS} shards, {keys.size} keys, "
+state = dist.make_sharded_state(N_SHARDS, N_BUCKETS, 4)
+state, ok, deferred, iov = dist.distributed_insert(
+    mesh, "data", state, jnp.asarray(hi), jnp.asarray(lo), fp_bits=16)
+assert bool(np.asarray(ok).all()) and not bool(np.asarray(deferred).any())
+print(f"{N_SHARDS} shards, {keys.size} keys routed+inserted on-device, "
       f"owner histogram: {np.bincount(owner, minlength=N_SHARDS)}")
+print(f"aggregate load: {float(dist.sharded_occupancy(state)):.3f}")
 
 # Distributed lookup: one all_to_all out, local probe, one all_to_all back.
 hits, overflow = dist.distributed_lookup(
@@ -63,3 +63,15 @@ thits, tov = dist.distributed_lookup(mesh, "data", state, jnp.asarray(hi),
                                      capacity_factor=0.5)
 print(f"tight capacity: found={int(np.asarray(thits).sum())}/{keys.size} "
       f"overflow={np.asarray(tov)} (burst signal -> EOF controller)")
+
+# Routed verified delete: half the keys churn out, owner shards clear them
+# (table first, then any stash-parked copies) in the same dispatch shape.
+half = keys.size // 2
+state, dok, _, _ = dist.distributed_delete(
+    mesh, "data", state, jnp.asarray(hi[:half]), jnp.asarray(lo[:half]),
+    fp_bits=16)
+rhits, _ = dist.distributed_lookup(mesh, "data", state, jnp.asarray(hi),
+                                   jnp.asarray(lo), fp_bits=16)
+print(f"deleted {int(np.asarray(dok).sum())}/{half}; survivors found: "
+      f"{int(np.asarray(rhits)[half:].sum())}/{keys.size - half}, "
+      f"load now {float(dist.sharded_occupancy(state)):.3f}")

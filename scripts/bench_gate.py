@@ -49,6 +49,15 @@ def main() -> int:
         if base > 0 and cur < base * (1.0 - THRESHOLD):
             bad.append(f"  {key}: {cur} vs baseline {base} "
                        f"({cur / base - 1.0:+.0%}, limit -{THRESHOLD:.0%})")
+    # PR-6 acceptance: the routed distributed insert must beat the host-loop
+    # baseline measured IN THE SAME RUN (not vs the committed file — both
+    # arms see identical machine weather, so this comparison is noise-free
+    # in a way the cross-run threshold can't be).
+    routed = fresh.get("distributed_insert_pallas_keys_per_s")
+    hostloop = fresh.get("distributed_insert_hostloop_keys_per_s")
+    if routed is not None and hostloop is not None and routed <= hostloop:
+        bad.append(f"  distributed_insert: routed {routed} keys/s does not "
+                   f"beat the host-loop baseline {hostloop} keys/s")
     if bad:
         print(f"bench gate FAILED ({len(bad)} row(s) regressed "
               f">{THRESHOLD:.0%}):")

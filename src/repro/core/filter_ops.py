@@ -282,18 +282,70 @@ class FilterOps:
                                  n_buckets=n_buckets, stashes=stashes,
                                  use_pallas=up)
 
-    # ------------------------------------------------- raw-table probes --
+    # --------------------------------------------------- raw-table ops --
+    #
+    # Stateless entry points over a bare uint32[n_buckets, bucket_size]
+    # table (plus optional stash): what ``core.distributed`` runs *inside*
+    # shard_map, where there is no FilterState — the shard's table slice IS
+    # the state.  Same backend dispatch as the stateful ops; donation is
+    # deliberately NOT threaded here (always ``donate=False`` on the inner
+    # kernels) because inside a shard_map body the arrays are tracers — the
+    # zero-copy update belongs to the *enclosing* jit, which
+    # ``distributed_insert``/``distributed_delete`` donate whole.
 
     def probe_table(self, table: jax.Array, hi: jax.Array, lo: jax.Array, *,
-                    n_buckets=None) -> jax.Array:
+                    n_buckets=None, stash=None) -> jax.Array:
         """Membership probe on a raw table (distributed shards / replicas).
 
         Same dispatch as ``lookup`` but stateless — ``core.distributed``
-        probes stacked per-shard tables inside shard_map with this.
+        probes stacked per-shard tables inside shard_map with this.  With a
+        ``stash`` the shard's overflow entries answer in the same pass
+        (fused on the kernel arm), so routed lookups see spilled keys.
         """
-        if self.resolve(table) == "pallas":
+        slots = 0 if stash is None else stash.shape[1]
+        if self.resolve(table, stash_slots=slots) == "pallas":
             return kops.filter_lookup(table, hi, lo, fp_bits=self.fp_bits,
-                                      n_buckets=n_buckets,
+                                      n_buckets=n_buckets, stash=stash,
                                       use_pallas="always")
-        return kref.probe_ref(table, hi, lo, fp_bits=self.fp_bits,
-                              n_buckets=n_buckets)
+        if stash is None:
+            return kref.probe_ref(table, hi, lo, fp_bits=self.fp_bits,
+                                  n_buckets=n_buckets)
+        return kops.filter_lookup(table, hi, lo, fp_bits=self.fp_bits,
+                                  n_buckets=n_buckets, stash=stash,
+                                  use_pallas="never")
+
+    def insert_table(self, table: jax.Array, hi: jax.Array, lo: jax.Array, *,
+                     n_buckets=None, valid: Optional[jax.Array] = None,
+                     stash=None):
+        """Raw-table bulk insert -> (table, ok[N]) or (table, stash, ok[N]).
+
+        The shard-local write the routed distributed insert runs on-device:
+        optimistic rounds + bounded eviction chains + stash spill, scheduled
+        when ``self.schedule`` — identical machinery to ``insert`` /
+        ``insert_spill`` minus the FilterState bookkeeping (shards count
+        occupancy from the table itself).
+        """
+        slots = 0 if stash is None else stash.shape[1]
+        up = ("always" if self.resolve(table, stash_slots=slots) == "pallas"
+              else "never")
+        return kops.filter_insert(table, hi, lo, fp_bits=self.fp_bits,
+                                  n_buckets=n_buckets, valid=valid,
+                                  evict_rounds=self.evict_rounds,
+                                  stash=stash, max_disp=self.max_disp,
+                                  use_pallas=up, schedule=self.schedule)
+
+    def delete_table(self, table: jax.Array, hi: jax.Array, lo: jax.Array, *,
+                     n_buckets=None, valid: Optional[jax.Array] = None,
+                     stash=None):
+        """Raw-table verified delete -> (table, ok[N]) or
+        (table, stash, ok[N]).
+
+        Fused first-match-slot clear; with a ``stash``, lanes that miss the
+        table clear their spilled entry (table copies first — the
+        sequential order), so a burst-parked key is deletable like any
+        other.
+        """
+        up = "always" if self.resolve(table) == "pallas" else "never"
+        return kops.filter_delete(table, hi, lo, fp_bits=self.fp_bits,
+                                  n_buckets=n_buckets, valid=valid,
+                                  stash=stash, use_pallas=up)

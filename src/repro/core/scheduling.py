@@ -58,6 +58,12 @@ def conflict_waves(bucket: jax.Array, valid: jax.Array) -> jax.Array:
     every real wave).  Sort-based (two stable argsorts), no [N, N]
     broadcast-compare: the pre-pass must stay cheap for batches far larger
     than a kernel block.
+
+    This same quantity is the distributed routing rank: with ``bucket`` =
+    owner shard, lane i claims slot ``wave[i]`` of its owner's
+    capacity-bounded all_to_all row (``core/distributed.py``), and
+    ``wave >= cap`` IS the routing-overflow condition — one definition for
+    kernel scheduling and shard dispatch.
     """
     n = bucket.shape[0]
     idx = jnp.arange(n, dtype=jnp.int32)
@@ -94,6 +100,35 @@ def dispatch_order(hi: jax.Array, lo: jax.Array, valid: jax.Array, *,
     perm = ord_b[ord_w]
     inv = jnp.zeros((n,), jnp.int32).at[perm].set(idx)
     return perm, inv
+
+
+def pair_rank(a: jax.Array, b: jax.Array, valid: jax.Array) -> jax.Array:
+    """Occurrence rank within equal-``(a, b)`` groups -> int32[N].
+
+    The two-key generalization of ``conflict_waves``: ``rank[i]`` counts
+    earlier valid lanes carrying the same (a, b) pair as lane i, in original
+    lane order.  Sort-based (two stable argsorts — b-minor then a-major
+    brings equal pairs into contiguous runs while ties keep batch order), so
+    there is no [N, N] broadcast-compare and it stays cheap for routed
+    shard batches far larger than a kernel block.  Used by the stash delete
+    pass (duplicate delete lanes grouped by (home bucket, fingerprint) —
+    the delete kernel's own discipline) and by any caller that needs the
+    distributed routing rank refined past a single key.  Invalid lanes get
+    rank N (past every real rank).
+    """
+    n = a.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    av = jnp.where(valid, a.astype(jnp.int32), _PARKED)
+    bv = jnp.where(valid, b.astype(jnp.int32), _PARKED)
+    ord1 = jnp.argsort(bv, stable=True)                 # minor key ...
+    order = ord1[jnp.argsort(av[ord1], stable=True)]    # ... then major
+    sa, sb = av[order], bv[order]
+    new_run = jnp.concatenate(
+        [jnp.ones((1,), bool), (sa[1:] != sa[:-1]) | (sb[1:] != sb[:-1])])
+    run_start = jax.lax.associative_scan(jnp.maximum,
+                                         jnp.where(new_run, idx, 0))
+    rank = jnp.zeros((n,), jnp.int32).at[order].set(idx - run_start)
+    return jnp.where(valid, rank, jnp.int32(n))
 
 
 @jax.jit

@@ -182,6 +182,29 @@ def constrain_batch_activations(x, parallel: Optional[ParallelConfig], *,
     return jax.lax.with_sharding_constraint(x, P(*spec))
 
 
+def shard_filter_state(mesh: Mesh, axis: str, state):
+    """Place a ``ShardedFilterState``'s arrays shard-per-device on ``mesh``.
+
+    The filter data plane's counterpart of ``make_shardings``: every array
+    field whose leading dim is the shard count (tables uint32[S, B, b],
+    stashes uint32[S, 2, slots]) gets ``P(axis)``; non-array fields (static
+    geometry like ``n_buckets``) pass through.  Works on any NamedTuple via
+    ``_replace``-free tree mapping, so this module needs no import of
+    ``core.distributed`` (which imports nothing from here either — the
+    placement helper is deliberately the only coupling point, and it is
+    one-directional).
+    """
+    n_shards = mesh.shape[axis]
+    sharding = NamedSharding(mesh, P(axis))
+
+    def place(x):
+        if isinstance(x, jax.Array) and x.ndim >= 1 and x.shape[0] == n_shards:
+            return jax.device_put(x, sharding)
+        return x
+
+    return jax.tree.map(place, state)
+
+
 def cache_pspec(shape: tuple, mesh: Mesh, parallel: ParallelConfig) -> P:
     """KV/state caches: batch over data + context-parallel seq over model.
 

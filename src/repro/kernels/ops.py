@@ -36,8 +36,8 @@ from repro.kernels.flash_attention import flash_attention
 from repro.kernels.insert import DEFAULT_EVICT_ROUNDS, insert_bulk, insert_once
 from repro.kernels.probe import probe, probe_emulated, probe_multi
 from repro.kernels.stash import (DEFAULT_STASH_SLOTS, make_stash,
-                                 stash_occupancy, stash_probe_ref,
-                                 stash_spill_ref)
+                                 stash_delete_ref, stash_occupancy,
+                                 stash_probe_ref, stash_spill_ref)
 
 # VMEM residency budget for the filter kernels.  The probe/insert/delete
 # BlockSpecs pin the full table per program, and the mutating kernels carry
@@ -422,19 +422,27 @@ def filter_insert(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
 
 
 def filter_delete(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
-                  fp_bits: int, n_buckets=None, valid=None,
-                  use_pallas: str = "auto", donate: bool = False
-                  ) -> tuple[jax.Array, jax.Array]:
-    """Fused bulk delete -> (new_table, deleted bool[N]).
+                  fp_bits: int, n_buckets=None, valid=None, stash=None,
+                  use_pallas: str = "auto", donate: bool = False):
+    """Fused bulk delete -> (new_table, deleted bool[N]), or
+    (new_table, new_stash, deleted) when an overflow ``stash`` is attached.
 
     Device-side first-match-slot clearing via ``kernels.delete``; the
     non-kernel path falls back to the sequential ``lax.scan`` oracle
-    (``ref.delete_ref``).  Callers must pre-verify membership (the OCF
-    keystore does) — blind deletes corrupt foreign fingerprints on every
-    cuckoo-filter implementation, kernels included.
+    (``ref.delete_ref``).  With a stash, lanes that miss the table clear
+    their stash entry in a composed jnp pass (``stash_delete`` — the stash
+    is tiny, so it never needs the kernel), which is what makes spilled
+    keys deletable: table copies go first, exactly like the sequential
+    table-then-stash order, because the kernel's rank discipline credits
+    earlier duplicate lanes with the resident copies.  Callers must
+    pre-verify membership (the OCF keystore does) — blind deletes corrupt
+    foreign fingerprints on every cuckoo-filter implementation, kernels
+    included.
     """
     if hi.shape[0] == 0:
-        return table, jnp.zeros((0,), jnp.bool_)
+        empty_ok = jnp.zeros((0,), jnp.bool_)
+        return (table, empty_ok) if stash is None else (table, stash,
+                                                        empty_ok)
     if valid is None:
         valid = jnp.ones(hi.shape, bool)
     block = min(autotune_block("delete", table_bytes=table.size * 4,
@@ -443,16 +451,23 @@ def filter_delete(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
                        vmem_bytes=kernel_vmem_bytes(
                            "delete", table_bytes=table.size * 4, block=block),
                        n_keys=hi.shape[0]):
-        return ref.delete_ref(table, hi, lo, fp_bits=fp_bits,
-                              n_buckets=n_buckets, valid=valid)
-    hi_p, n = _pad_to(hi, block)
-    lo_p, _ = _pad_to(lo, block)
-    valid_p, _ = _pad_to(valid, block)   # pads False: never touches the table
-    new_table, ok = delete_bulk(table, hi_p, lo_p, fp_bits=fp_bits,
-                                n_buckets=n_buckets, valid=valid_p,
-                                block=block, interpret=not _on_tpu(),
-                                emulate=_emulate(), donate=donate)
-    return new_table, _unpad(ok, n)
+        new_table, ok = ref.delete_ref(table, hi, lo, fp_bits=fp_bits,
+                                       n_buckets=n_buckets, valid=valid)
+    else:
+        hi_p, n = _pad_to(hi, block)
+        lo_p, _ = _pad_to(lo, block)
+        valid_p, _ = _pad_to(valid, block)   # pads False: never touches table
+        new_table, ok = delete_bulk(table, hi_p, lo_p, fp_bits=fp_bits,
+                                    n_buckets=n_buckets, valid=valid_p,
+                                    block=block, interpret=not _on_tpu(),
+                                    emulate=_emulate(), donate=donate)
+        ok = _unpad(ok, n)
+    if stash is None:
+        return new_table, ok
+    nb = table.shape[0] if n_buckets is None else n_buckets
+    stash, cleared = stash_delete_ref(stash, hi, lo, valid & ~ok,
+                                      fp_bits=fp_bits, n_buckets=nb)
+    return new_table, stash, ok | cleared
 
 
 def attention(q, k, v, *, causal: bool = True, window: int | None = None,

@@ -20,6 +20,10 @@ whichever bucket of the pair a chain happened to hold at exhaustion
 identifies the pair: a probe matches a stash entry when the fingerprints
 agree AND the stored bucket is either of the probe's two candidate buckets.
 That makes the stash insensitive to *which* victim of a chain got spilled.
+Deletes clear stash entries through the same identity (``stash_delete``), so
+a spilled key is deletable exactly like a resident one — required by the
+distributed write path, where a shard's verified deletes must reach keys
+that parked in its stash during a burst.
 
 Everything here is pure jnp on purpose: the same three functions run inside
 the Pallas kernels (``kernels/insert.py`` / ``kernels/probe.py``), on the
@@ -32,6 +36,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import hashing
+from repro.core.scheduling import pair_rank
 
 # Default stash capacity.  The stash absorbs chain-budget overflows, whose
 # count at a fixed load is O(batch residue), not O(table) — 128 slots rides
@@ -90,6 +95,54 @@ def stash_spill(stash: jax.Array, carried: jax.Array, bucket: jax.Array,
     s_fp = s_fp.at[upd].set(carried.astype(jnp.uint32), mode="drop")
     s_bkt = s_bkt.at[upd].set(bucket.astype(jnp.uint32), mode="drop")
     return jnp.concatenate([s_fp[None, :], s_bkt[None, :]], axis=0), fits
+
+
+def stash_delete(stash: jax.Array, fp: jax.Array, i1: jax.Array,
+                 i2: jax.Array, want: jax.Array
+                 ) -> tuple[jax.Array, jax.Array]:
+    """Clear ``want`` lanes' matching stash entries -> (new_stash, cleared).
+
+    The stash-side counterpart of the delete kernel's first-match-slot
+    clear: lane i matches slots whose fingerprint equals ``fp[i]`` and whose
+    stored bucket is either candidate (the involution identity, same as
+    ``stash_match``), is ranked among earlier want-lanes carrying the same
+    (home bucket, fingerprint) pair — the delete kernel's duplicate
+    discipline, computed sort-based (``pair_rank``) since this pass runs
+    outside the kernels — and clears the rank-th matching slot.  Lanes whose
+    rank exceeds the match count report False.  Cleared slots zero both rows
+    so they are indistinguishable from never-used ones (spills refill them
+    first, in slot order).
+
+    Without this, a key that spilled to the stash could never be deleted:
+    its fingerprint would answer lookups forever — a permanent false
+    positive the verified-delete contract does not allow.
+    """
+    s_fp, s_bkt = stash[0], stash[1]
+    slots = s_fp.shape[0]
+    i1u = i1.astype(jnp.uint32)[:, None]
+    i2u = i2.astype(jnp.uint32)[:, None]
+    match = (s_fp[None, :] == fp[:, None]) & (
+        (s_bkt[None, :] == i1u) | (s_bkt[None, :] == i2u))      # [N, S]
+    rank = pair_rank(i1.astype(jnp.int32), fp.astype(jnp.int32), want)
+    cleared = want & (rank < jnp.sum(match, axis=1).astype(jnp.int32))
+    match_pos = jnp.cumsum(match.astype(jnp.int32), axis=1) - 1
+    is_dest = match & (match_pos == rank[:, None])
+    slot = jnp.argmax(is_dest, axis=1)
+    upd = jnp.where(cleared, slot, slots)                 # OOB -> dropped
+    s_fp = s_fp.at[upd].set(jnp.uint32(0), mode="drop")
+    s_bkt = s_bkt.at[upd].set(jnp.uint32(0), mode="drop")
+    return jnp.concatenate([s_fp[None, :], s_bkt[None, :]], axis=0), cleared
+
+
+def stash_delete_ref(stash: jax.Array, hi: jax.Array, lo: jax.Array,
+                     want: jax.Array, *, fp_bits: int, n_buckets
+                     ) -> tuple[jax.Array, jax.Array]:
+    """Hash a key batch and clear its stash entries (the whole-key arm
+    ``ops.filter_delete`` composes after the table pass)."""
+    fp = hashing.fingerprint(hi, lo, fp_bits)
+    i1 = hashing.index_hash_dyn(hi, lo, n_buckets)
+    i2 = hashing.alt_index_dyn(i1, fp, n_buckets)
+    return stash_delete(stash, fp, i1, i2, want)
 
 
 def stash_probe_ref(stash: jax.Array, hi: jax.Array, lo: jax.Array, *,

@@ -10,6 +10,13 @@ contended key per batch — the Pallas insert kernel reproduces this oracle
 batches are order-racy by construction on any parallel schedule; there the
 parity contract is membership + conservation, not table identity (exactly
 the contract the PR-3 eviction tests already use).
+
+The stash is modeled as a fixed array of *slots* (not a compacting list),
+mirroring the kernels' uint32[2, slots] layout: a spill takes the first
+empty slot in slot order, a delete zeroes its slot in place, and later
+spills refill holes first — so the slot-for-slot comparison against the
+device stash stays exact through interleaved insert/delete streams (the
+distributed write-path tests drive exactly that).
 """
 from __future__ import annotations
 
@@ -26,7 +33,7 @@ class PyStashFilter(PyCuckooFilter):
 
     ``evict_rounds`` plays the kernel's role (bounded rounds, not bounded
     kicks: a round whose bucket is fully dirty burns the round without
-    kicking, exactly like a lane losing its rank race).  ``stash`` holds
+    kicking, exactly like a lane losing its rank race).  Stash slots hold
     ``(fp, bucket)`` pairs; by the alternate-index involution the stored
     bucket identifies the fingerprint's candidate pair regardless of which
     end of it the chain held at exhaustion.
@@ -37,8 +44,14 @@ class PyStashFilter(PyCuckooFilter):
 
     def __post_init__(self):
         super().__post_init__()
-        self.stash: list[tuple[int, int]] = []   # (fp, bucket)
+        # Fixed slot array (None == empty) — kernel layout, not a list.
+        self._slots: list[tuple[int, int] | None] = [None] * self.stash_slots
         self.spills = 0
+
+    @property
+    def stash(self) -> list[tuple[int, int]]:
+        """Live (fp, bucket) entries in slot order (holes skipped)."""
+        return [e for e in self._slots if e is not None]
 
     # -- core ops ------------------------------------------------------
 
@@ -57,7 +70,8 @@ class PyStashFilter(PyCuckooFilter):
         slot of the current bucket, else (B) kick the first non-dirty slot
         rotating from ``steps % bucket_size``, chase the victim to its
         alternate bucket.  On exhaustion the carried fingerprint parks in
-        the stash (kicks stay committed); only a full stash rolls back.
+        the first empty stash slot (kicks stay committed); only a full
+        stash rolls back.
         """
         fp, i1 = self._fp_i1(key)
         i2 = self._alt(i1, fp)
@@ -91,10 +105,11 @@ class PyStashFilter(PyCuckooFilter):
             carried = victim
             bucket = self._alt(bucket, int(carried))
             steps += 1
-        if len(self.stash) < self.stash_slots:    # spill: kicks stay
-            self.stash.append((int(carried), int(bucket)))
-            self.spills += 1
-            return True
+        for k, entry in enumerate(self._slots):   # spill: first empty slot,
+            if entry is None:                     # kicks stay committed
+                self._slots[k] = (int(carried), int(bucket))
+                self.spills += 1
+                return True
         for (bi, bj, w) in reversed(hist):        # stash full too: rollback
             # newest-first restore, identical to the kernel's rb_body:
             # put the carried victim back, pick up what the kick wrote.
@@ -103,10 +118,30 @@ class PyStashFilter(PyCuckooFilter):
         assert carried == fp                      # chain unwound losslessly
         return False
 
+    def delete(self, key: int) -> bool:
+        """Verified delete: table copies first, then the stash.
+
+        Mirrors the device order (``ops.filter_delete`` with a stash): the
+        fused kernel clears a resident copy when one exists; only a lane
+        that misses the table clears its stash slot — zeroed in place, so
+        slot positions of the survivors are untouched (bit-for-bit vs the
+        device stash).
+        """
+        if super().delete(key):
+            return True
+        fp, i1 = self._fp_i1(key)
+        i2 = self._alt(i1, fp)
+        for k, entry in enumerate(self._slots):
+            if entry is not None and entry[0] == fp and entry[1] in (i1, i2):
+                self._slots[k] = None
+                return True
+        return False
+
     def stash_array(self) -> np.ndarray:
         """The stash as the kernels' uint32[2, slots] layout (tests)."""
         out = np.zeros((2, self.stash_slots), dtype=np.uint32)
-        for k, (sf, sb) in enumerate(self.stash):
-            out[0, k] = sf
-            out[1, k] = sb
+        for k, entry in enumerate(self._slots):
+            if entry is not None:
+                out[0, k] = entry[0]
+                out[1, k] = entry[1]
         return out

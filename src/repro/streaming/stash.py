@@ -12,6 +12,8 @@ import dataclasses
 
 import jax
 
+import jax.numpy as jnp
+
 from repro.kernels.stash import (DEFAULT_STASH_SLOTS, make_stash,
                                  stash_occupancy)
 
@@ -40,3 +42,28 @@ class OverflowStash:
     @property
     def fill(self) -> float:
         return self.occupancy / self.slots
+
+
+def make_sharded_stashes(n_shards: int, slots: int = DEFAULT_STASH_SLOTS
+                         ) -> jax.Array:
+    """Per-shard stash stack: uint32[n_shards, 2, slots] of zeros.
+
+    The distributed write path (``core/distributed.py``) carries one stash
+    per shard inside ``ShardedFilterState`` so a shard's eviction-chain
+    overflows park on the shard that owns them — sharded with the tables,
+    mutated inside the same ``shard_map`` body, never copied to the host.
+    """
+    assert n_shards > 0 and slots > 0
+    return jnp.zeros((n_shards, 2, slots), dtype=jnp.uint32)
+
+
+def sharded_stash_fill(stashes: jax.Array) -> jax.Array:
+    """Per-shard fill fraction -> float32[n_shards].
+
+    The distributed half of the admission congestion signal: the max over
+    shards is what a streaming control plane compares against the same
+    thresholds ``streaming.admission`` applies to a single generation's
+    ``OverflowStash.fill``.
+    """
+    occ = jnp.sum(stashes[:, 0, :] != 0, axis=-1)
+    return occ.astype(jnp.float32) / jnp.float32(stashes.shape[-1])
