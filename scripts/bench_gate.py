@@ -58,6 +58,31 @@ def main() -> int:
     if routed is not None and hostloop is not None and routed <= hostloop:
         bad.append(f"  distributed_insert: routed {routed} keys/s does not "
                    f"beat the host-loop baseline {hostloop} keys/s")
+    # PR-7 acceptance: false-positive-rate gates, same-run like the routed/
+    # hostloop pair (rates at a fixed seed are deterministic, so these are
+    # exact, not thresholds-with-noise).
+    #   * ceiling: every fp_rate_* row must stay below 4x the partial-key
+    #     expectation 2b/2^f (b=4 slots, two buckets, fp_rate_fp_bits) —
+    #     a hash-quality tripwire, generous enough for binomial wobble;
+    #   * ratio: after feedback the adaptive filter's FPR on the replayed
+    #     adversarial mix must be >= 10x below the static filter's.
+    fpb = fresh.get("fp_rate_fp_bits")
+    if fpb is not None:
+        ceiling = 4.0 * (2 * 4) / (1 << int(fpb))
+        for key in ("fp_rate_static_uniform", "fp_rate_adaptive_uniform",
+                    "fp_rate_static_adversarial",
+                    "fp_rate_adaptive_adversarial"):
+            rate = fresh.get(key)
+            if rate is None:
+                bad.append(f"  {key}: row missing from fresh bench")
+            elif rate > ceiling:
+                bad.append(f"  {key}: {rate:.2e} above ceiling "
+                           f"{ceiling:.2e} (fp_bits={fpb})")
+        stat = fresh.get("fp_rate_static_adversarial")
+        adap = fresh.get("fp_rate_adaptive_adversarial")
+        if stat is not None and adap is not None and adap * 10.0 > stat:
+            bad.append(f"  fp_rate adversarial: adaptive {adap:.2e} not "
+                       f">=10x below static {stat:.2e} after feedback")
     if bad:
         print(f"bench gate FAILED ({len(bad)} row(s) regressed "
               f">{THRESHOLD:.0%}):")

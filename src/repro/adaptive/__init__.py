@@ -1,0 +1,24 @@
+"""Adaptive filtering: false-positive feedback, per-slot hash selectors,
+and reputation-weighted admission.
+
+Three tiers, cheapest first:
+
+  1. ``AdaptiveState`` + the selector-aware kernels — per-slot 2-bit hash
+     selectors let a confirmed false positive be *repaired in place* (the
+     colliding slot's fingerprint is rewritten under the next member of a
+     4-hash family; the entry never moves, so no false negative is ever
+     introduced).
+  2. ``ReputationManager`` — repeat offenders the selector family cannot
+     separate are promoted to a tiny exact-negative side table.
+  3. ``AdmissionController`` hysteresis (shared with the streaming
+     scheduler) gates cold report floods off the device path.
+"""
+from repro.adaptive.filter import (AdaptiveConfig, AdaptiveFilter,
+                                   split_keys)
+from repro.adaptive.reputation import (AdaptiveMembership, ReputationConfig,
+                                       ReputationManager)
+from repro.adaptive.state import AdaptiveState, make_adaptive_state
+
+__all__ = ["AdaptiveConfig", "AdaptiveFilter", "AdaptiveMembership",
+           "AdaptiveState", "ReputationConfig", "ReputationManager",
+           "make_adaptive_state", "split_keys"]

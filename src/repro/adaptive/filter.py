@@ -1,0 +1,122 @@
+"""AdaptiveFilter — host control plane over the four-plane adaptive state.
+
+The device data plane (``core.filter_ops.FilterOps``'s ``*_adaptive`` entry
+points over ``AdaptiveState``) speaks (hi, lo) uint32 pairs and jax arrays;
+this wrapper speaks uint64 key batches and owns the state + overflow stash,
+the way ``streaming.generations.GenerationalFilter`` wraps the generation
+ring.  The one genuinely new verb is ``report_false_positives``: the
+feedback edge that makes the filter *learn* — a confirmed false positive
+(the caller checked ground truth and the key is NOT a member) repairs every
+colliding slot by bumping its 2-bit selector and rewriting the stored
+fingerprint from the mirrored resident key.  Entries never move, so
+repairs can never manufacture a false negative; repeat offenders that the
+selector family cannot separate are the reputation tier's job
+(``adaptive.reputation``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.adaptive.state import AdaptiveState, make_adaptive_state
+from repro.core.filter_ops import Backend, FilterOps
+from repro.kernels import ops as kops
+
+
+def split_keys(keys) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """uint64 key batch -> (hi, lo) uint32 device pair."""
+    k = np.asarray(keys, dtype=np.uint64)
+    hi = (k >> np.uint64(32)).astype(np.uint32)
+    lo = (k & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+    return jnp.asarray(hi), jnp.asarray(lo)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptiveConfig:
+    """Sizing + dispatch knobs for one adaptive filter."""
+
+    n_buckets: int
+    bucket_size: int = 4
+    fp_bits: int = 16
+    stash_slots: int = kops.DEFAULT_STASH_SLOTS
+    backend: Backend = "auto"
+    donate: bool = True
+
+    def __post_init__(self):
+        assert self.n_buckets > 0 and self.bucket_size in (1, 2, 4, 8, 16)
+
+    def make_filter_ops(self) -> FilterOps:
+        return FilterOps(fp_bits=self.fp_bits, backend=self.backend,
+                         donate=self.donate)
+
+
+class AdaptiveFilter:
+    """Uint64-key facade over the adaptive data plane.
+
+    Duck-compatible with ``GenerationalFilter`` where the admission layer
+    cares (``fills()``), so ``streaming.admission.AdmissionController`` can
+    gate report floods against THIS filter's congestion signal unchanged.
+    """
+
+    def __init__(self, config: AdaptiveConfig,
+                 ops: Optional[FilterOps] = None):
+        self.config = config
+        self.ops = ops or config.make_filter_ops()
+        self.state: AdaptiveState = make_adaptive_state(
+            config.n_buckets, config.bucket_size)
+        self.stash = kops.make_stash(config.stash_slots)
+        self.reports = 0
+        self.adapted = 0
+
+    # -- occupancy ------------------------------------------------------
+
+    @property
+    def capacity(self) -> int:
+        return self.config.n_buckets * self.config.bucket_size
+
+    def fills(self) -> tuple[float, float]:
+        """(table fill, stash fill) — one host transfer each."""
+        fill = float(self.state.count) / self.capacity
+        stash_fill = (float(kops.stash_occupancy(self.stash))
+                      / self.config.stash_slots)
+        return fill, stash_fill
+
+    # -- data-plane verbs ----------------------------------------------
+
+    def insert(self, keys) -> np.ndarray:
+        hi, lo = split_keys(keys)
+        self.state, self.stash, ok = self.ops.insert_adaptive(
+            self.state, hi, lo, stash=self.stash)
+        return np.asarray(ok)
+
+    def lookup(self, keys) -> np.ndarray:
+        hi, lo = split_keys(keys)
+        return np.asarray(self.ops.lookup_adaptive(self.state, hi, lo,
+                                                   stash=self.stash))
+
+    def delete(self, keys) -> np.ndarray:
+        hi, lo = split_keys(keys)
+        self.state, self.stash, ok = self.ops.delete_adaptive(
+            self.state, hi, lo, stash=self.stash)
+        return np.asarray(ok)
+
+    def report_false_positives(self, keys) -> tuple[np.ndarray, np.ndarray]:
+        """Feed confirmed false positives back -> (adapted[N], resident[N]).
+
+        Callers MUST have verified the keys against ground truth: a report
+        whose key IS a member is refused slot-by-slot (``resident`` lanes),
+        never repaired into a false negative.  ``adapted`` lanes had at
+        least one colliding slot rewritten; a reported key that matches
+        only the stash adapts nothing (no selector there) and returns
+        False on both — the reputation tier promotes those.
+        """
+        hi, lo = split_keys(keys)
+        self.state, adapted, resident = self.ops.report_false_positive(
+            self.state, hi, lo)
+        adapted = np.asarray(adapted)
+        self.reports += int(adapted.shape[0])
+        self.adapted += int(adapted.sum())
+        return adapted, np.asarray(resident)

@@ -1,0 +1,55 @@
+"""Device state of the adaptive (false-positive-learning) filter.
+
+Four planes beside each other, all in one preallocated pow2 buffer (the
+``core.filter.FilterState`` discipline — OCF-style resizes change no array
+shapes):
+
+  * ``table`` — the fingerprint plane, identical layout to the static
+    filter: ``uint32[buffer_buckets, bucket_size]``, 0 == EMPTY.  A slot
+    stores ``fingerprint_sel(resident, sel[slot])`` — the SELECTED family
+    member, not necessarily the selector-0 fingerprint.
+  * ``sels`` — the packed per-slot hash-selector plane
+    (``kernels.selector``): ``uint32[buffer_buckets, 1]``, 2 bits per slot.
+    All-zero == every slot on the static fingerprint, which makes a fresh
+    adaptive filter bit-identical to a fresh static one.
+  * ``khi`` / ``klo`` — mirror key planes (the adaptive-cuckoo-filter
+    "remote representation"): the resident's uint32 key pair, needed to
+    rehash a slot on repair and to re-derive selector-0 geometry when an
+    eviction chain kicks it.
+
+Memory: +9 bytes/slot over the static filter's 4 (8 for the mirrored key,
+0.25 packed selector) — the price of repairability; the reputation tier
+(``adaptive.reputation``) is deliberately NOT part of this state, it is a
+tiny host-side exact structure.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.selector import make_key_planes, make_sel_plane
+
+
+class AdaptiveState(NamedTuple):
+    table: jax.Array      # uint32[buffer_buckets, bucket_size]; 0 == EMPTY
+    sels: jax.Array       # uint32[buffer_buckets, 1] packed 2-bit selectors
+    khi: jax.Array        # uint32[buffer_buckets, bucket_size] mirror key hi
+    klo: jax.Array        # uint32[buffer_buckets, bucket_size] mirror key lo
+    count: jax.Array      # int32[] live fingerprints (table-resident)
+    n_buckets: jax.Array  # int32[] ACTIVE bucket count (<= buffer_buckets)
+
+
+def make_adaptive_state(n_buckets: int, bucket_size: int = 4,
+                        buffer_buckets: Optional[int] = None
+                        ) -> AdaptiveState:
+    buf = buffer_buckets or n_buckets
+    assert buf >= n_buckets
+    khi, klo = make_key_planes(buf, bucket_size)
+    return AdaptiveState(
+        table=jnp.zeros((buf, bucket_size), dtype=jnp.uint32),
+        sels=make_sel_plane(buf),
+        khi=khi, klo=klo,
+        count=jnp.zeros((), dtype=jnp.int32),
+        n_buckets=jnp.asarray(n_buckets, jnp.int32))

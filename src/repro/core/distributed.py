@@ -136,18 +136,21 @@ def sharded_occupancy(state: ShardedFilterState) -> jax.Array:
     return live.astype(jnp.float32) / jnp.float32(state.tables.size)
 
 
-def _route(hi, lo, n_shards: int, cap: int):
+def _route(hi, lo, n_shards: int, cap: int, valid=None):
     """Owner routing for one source shard's lane batch.
 
     Returns (dst int32[N] — owner or n_shards for overflow, rank int32[N]
     — the claimed slot in the owner's row, fits bool[N]).  ``rank`` is
     ``conflict_waves`` with the owner shard as the bucket, computed in
     original lane order — so answers scatter straight back by (dst, rank)
-    with no argsort/inverse permutation.
+    with no argsort/inverse permutation.  Invalid lanes (``valid=False`` —
+    resubmission padding) claim no capacity slot and never fit.
     """
     owner = hashing.owner_shard(hi, lo, n_shards).astype(jnp.int32)
-    rank = conflict_waves(owner, jnp.ones(owner.shape, bool))
-    fits = rank < cap
+    if valid is None:
+        valid = jnp.ones(owner.shape, bool)
+    rank = conflict_waves(owner, valid)
+    fits = (rank < cap) & valid
     dst = jnp.where(fits, owner, n_shards)
     return dst, rank, fits
 
@@ -258,11 +261,11 @@ def _routed_write_fn(mesh: Mesh, axis: str, op: str, n_shards: int,
                      evict_rounds=evict_rounds, max_disp=max_disp,
                      schedule=schedule)
 
-    def shard_fn(tables, stashes, hi, lo):
+    def shard_fn(tables, stashes, hi, lo, lane_valid):
         table = tables[0]
         stash = stashes[0] if has_stash else None
-        dst, rank, fits = _route(hi, lo, n_shards, cap)
-        overflow = jnp.sum(~fits, dtype=jnp.int32)
+        dst, rank, fits = _route(hi, lo, n_shards, cap, lane_valid)
+        overflow = jnp.sum(~fits & lane_valid, dtype=jnp.int32)
         buf_hi, buf_lo, valid = _scatter_routed(dst, rank, fits, n_shards,
                                                 cap, hi, lo)
         r_hi = jax.lax.all_to_all(buf_hi, axis, 0, 0, tiled=False)
@@ -284,13 +287,13 @@ def _routed_write_fn(mesh: Mesh, axis: str, op: str, n_shards: int,
         ok = ok_flat.reshape(n_shards, cap) & r_valid
         back = jax.lax.all_to_all(ok, axis, 0, 0, tiled=False)
         ok_lane = fits & back[dst.clip(0, n_shards - 1), rank]
-        deferred = ~fits                    # never attempted: resubmit
+        deferred = ~fits & lane_valid       # never attempted: resubmit
         return (new_table[None], new_stash[None], ok_lane, deferred,
                 overflow[None])
 
     mapped = _shard_map_unchecked(
         shard_fn, mesh=mesh,
-        in_specs=(P(axis), P(axis), P(axis), P(axis)),
+        in_specs=(P(axis), P(axis), P(axis), P(axis), P(axis)),
         out_specs=(P(axis),) * 5)
     return jax.jit(mapped, donate_argnums=(0, 1) if donate else ())
 
@@ -299,7 +302,7 @@ def _distributed_write(op: str, mesh: Mesh, axis: str,
                        state: ShardedFilterState, hi, lo, *, fp_bits: int,
                        capacity_factor: float, backend: str,
                        evict_rounds: Optional[int], max_disp: int,
-                       schedule: bool, donate: bool):
+                       schedule: bool, donate: bool, valid=None):
     n_shards = mesh.shape[axis]
     per_shard = hi.shape[0] // n_shards
     cap = int(per_shard * capacity_factor / n_shards + 1)
@@ -309,8 +312,10 @@ def _distributed_write(op: str, mesh: Mesh, axis: str,
                           state.n_buckets, has_stash)
     stashes = (state.stashes if has_stash else
                jnp.zeros((n_shards, 2, 1), jnp.uint32))  # dummy, threaded
+    if valid is None:
+        valid = jnp.ones(hi.shape, bool)
     tables, stashes, ok, deferred, overflow = fn(state.tables, stashes,
-                                                 hi, lo)
+                                                 hi, lo, valid)
     new_state = state._replace(tables=tables,
                                stashes=stashes if has_stash else None)
     return new_state, ok, deferred, overflow
@@ -321,7 +326,7 @@ def distributed_insert(mesh: Mesh, axis: str, state: ShardedFilterState,
                        capacity_factor: float = 2.0, backend: str = "auto",
                        evict_rounds: Optional[int] = None,
                        max_disp: int = 500, schedule: bool = True,
-                       donate: bool = False):
+                       donate: bool = False, valid=None):
     """Routed bulk insert across filter shards, entirely on-device.
 
     ``hi``/``lo``: uint32[n_shards * per_shard] keys, sharded over ``axis``.
@@ -351,19 +356,24 @@ def distributed_insert(mesh: Mesh, axis: str, state: ShardedFilterState,
     ``evict_rounds`` bounds the kernel arm's eviction rounds (None -> the
     0.85-load default); ``max_disp`` bounds the jnp arm's sequential
     chains — the same two knobs, same semantics, as ``FilterOps``.
+
+    ``valid`` masks lanes out entirely (never routed, never attempted,
+    never deferred) — what lets a resubmission pump pad a deferred batch
+    to the sharded shape without inserting sentinel keys
+    (``serving.scheduler.DeferredWritePump``).
     """
     return _distributed_write("insert", mesh, axis, state, hi, lo,
                               fp_bits=fp_bits,
                               capacity_factor=capacity_factor,
                               backend=backend, evict_rounds=evict_rounds,
                               max_disp=max_disp, schedule=schedule,
-                              donate=donate)
+                              donate=donate, valid=valid)
 
 
 def distributed_delete(mesh: Mesh, axis: str, state: ShardedFilterState,
                        hi: jax.Array, lo: jax.Array, *, fp_bits: int,
                        capacity_factor: float = 2.0, backend: str = "auto",
-                       donate: bool = False):
+                       donate: bool = False, valid=None):
     """Routed verified delete across filter shards, entirely on-device.
 
     The write-side mirror of ``distributed_lookup``: each key deletes on
@@ -382,7 +392,8 @@ def distributed_delete(mesh: Mesh, axis: str, state: ShardedFilterState,
                               fp_bits=fp_bits,
                               capacity_factor=capacity_factor,
                               backend=backend, evict_rounds=None,
-                              max_disp=500, schedule=False, donate=donate)
+                              max_disp=500, schedule=False, donate=donate,
+                              valid=valid)
 
 
 # ------------------------------------------------- compat shims (host) --

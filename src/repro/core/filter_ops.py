@@ -282,6 +282,114 @@ class FilterOps:
                                  n_buckets=n_buckets, stashes=stashes,
                                  use_pallas=up)
 
+    # ---------------------------------------------------- adaptive ops --
+    #
+    # Selector-aware entry points over the four-plane adaptive state
+    # (``adaptive.state.AdaptiveState`` — duck-typed here to keep core free
+    # of an adaptive import: anything with table/sels/khi/klo/count/
+    # n_buckets fields and NamedTuple ``_replace`` works).  The planes ride
+    # together through the fused kernels; there is no separate jnp oracle —
+    # the XLA grid emulation of the same kernel body is the non-pallas arm,
+    # so both backends are bit-for-bit by construction.
+
+    def _adaptive_up(self, state, *, stash_slots: int = 0) -> str:
+        bytes_ = 3 * state.table.size * 4 + state.table.shape[0] * 4
+        return ("always" if self.resolve_bytes(
+            bytes_, stash_slots=stash_slots) == "pallas" else "never")
+
+    def lookup_adaptive(self, state, hi: jax.Array, lo: jax.Array,
+                        stash: Optional[jax.Array] = None) -> jax.Array:
+        """Selector-aware membership -> bool[N].
+
+        A slot answers under ITS selector, so a repaired slot no longer
+        hits the reported query; stash entries are selector-0 and are
+        checked in the same pass when attached.
+        """
+        slots = 0 if stash is None else stash.shape[1]
+        return kops.adaptive_lookup(
+            state.table, state.sels, hi, lo, fp_bits=self.fp_bits,
+            n_buckets=state.n_buckets, stash=stash,
+            use_pallas=self._adaptive_up(state, stash_slots=slots))
+
+    def insert_adaptive(self, state, hi: jax.Array, lo: jax.Array,
+                        valid: Optional[jax.Array] = None,
+                        stash: Optional[jax.Array] = None):
+        """Bulk insert over the adaptive planes -> (state, ok[N]) or
+        (state, stash, ok[N]).
+
+        New entries land as selector-0 slots with the key mirrored into
+        khi/klo; kicks reset the victim's selector (its adaptation is the
+        price of movement — the standard adaptive-cuckoo trade) and
+        rollback restores all four planes verbatim.
+        """
+        slots = 0 if stash is None else stash.shape[1]
+        if stash is not None:
+            spilled_before = kops.stash_occupancy(stash)
+        out = kops.adaptive_insert(
+            state.table, state.sels, state.khi, state.klo, hi, lo,
+            fp_bits=self.fp_bits, n_buckets=state.n_buckets, valid=valid,
+            evict_rounds=self.evict_rounds, stash=stash,
+            use_pallas=self._adaptive_up(state, stash_slots=slots),
+            schedule=self.schedule, donate=self.donate)
+        ok = out[-1]
+        count = state.count + jnp.sum(ok, dtype=jnp.int32)
+        if stash is None:
+            table, sels, khi, klo = out[:4]
+            return state._replace(table=table, sels=sels, khi=khi, klo=klo,
+                                  count=count), ok
+        table, sels, khi, klo, new_stash = out[:5]
+        count = count - (kops.stash_occupancy(new_stash) - spilled_before)
+        return state._replace(table=table, sels=sels, khi=khi, klo=klo,
+                              count=count), new_stash, ok
+
+    def delete_adaptive(self, state, hi: jax.Array, lo: jax.Array,
+                        valid: Optional[jax.Array] = None,
+                        stash: Optional[jax.Array] = None):
+        """Verified bulk delete -> (state, ok[N]) or (state, stash, ok[N]).
+
+        Slots match under THEIR selector, so adapted residents stay
+        deletable by key; clearing zeroes all four planes.  With a stash,
+        lanes that miss the table clear their selector-0 stash entry in the
+        composed jnp pass, same order as the static path.
+        """
+        out = kops.adaptive_delete(
+            state.table, state.sels, state.khi, state.klo, hi, lo,
+            fp_bits=self.fp_bits, n_buckets=state.n_buckets, valid=valid,
+            stash=stash, use_pallas=self._adaptive_up(state),
+            donate=self.donate)
+        ok = out[-1]
+        if stash is None:
+            table, sels, khi, klo = out[:4]
+            count = state.count - jnp.sum(ok, dtype=jnp.int32)
+            return state._replace(table=table, sels=sels, khi=khi, klo=klo,
+                                  count=count), ok
+        table, sels, khi, klo, new_stash = out[:5]
+        stash_cleared = (kops.stash_occupancy(stash)
+                         - kops.stash_occupancy(new_stash))
+        count = state.count - jnp.sum(ok, dtype=jnp.int32) + stash_cleared
+        return state._replace(table=table, sels=sels, khi=khi, klo=klo,
+                              count=count), new_stash, ok
+
+    def report_false_positive(self, state, hi: jax.Array, lo: jax.Array,
+                              valid: Optional[jax.Array] = None):
+        """Feed confirmed false positives back -> (state, adapted[N],
+        resident[N]).
+
+        Every slot in a reported key's candidate pair whose stored
+        fingerprint collides under that slot's selector is bumped to its
+        next family member and rewritten from the mirrored resident key —
+        the entry never moves, so no false negative can be introduced.
+        ``resident`` flags reports that were actually true positives (never
+        repaired); ``adapted`` lanes stop colliding with probability
+        1 - 2^-fp_bits per future query.  Stash-resident collisions cannot
+        adapt (the stash has no selector) — repeat offenders are the
+        reputation tier's job (``adaptive.reputation``).
+        """
+        table, sels, adapted, resident = kops.adaptive_report(
+            state.table, state.sels, state.khi, state.klo, hi, lo,
+            fp_bits=self.fp_bits, n_buckets=state.n_buckets, valid=valid)
+        return state._replace(table=table, sels=sels), adapted, resident
+
     # --------------------------------------------------- raw-table ops --
     #
     # Stateless entry points over a bare uint32[n_buckets, bucket_size]

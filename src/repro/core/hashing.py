@@ -31,6 +31,15 @@ _SM_C1 = np.uint32(0x9E3779B9)  # golden-ratio increment (splitmix)
 _SM_C2 = np.uint32(0x7FEB352D)
 _SM_C3 = np.uint32(0x846CA68B)
 
+# Selector-parameterized fingerprint family (Adaptive Cuckoo Filters).
+# Selector s XORs a tweak into the pre-mix seed, so the four family members
+# are independent full-avalanche hashes of the same key.  Tweak 0 is the
+# identity: ``fingerprint_sel(.., sel=0)`` is bit-identical to
+# ``fingerprint`` — a table whose selector plane is all-zero behaves exactly
+# like the static filter.
+SEL_VARIANTS = 4          # 2 selector bits per slot
+_SEL_TWEAKS = (0x00000000, 0x7F4A7C15, 0x94D049BB, 0xBF58476D)
+
 # ---------------------------------------------------------------- numpy ----
 
 
@@ -73,6 +82,33 @@ def fingerprint_np(hi: np.ndarray, lo: np.ndarray, fp_bits: int) -> np.ndarray:
     mask = np.uint32((1 << fp_bits) - 1)
     fp = (h & mask).astype(np.uint32)
     # Remap 0 -> 1: costs a sliver of entropy, keeps the sentinel free.
+    return np.where(fp == 0, np.uint32(1), fp)
+
+
+def sel_tweak_np(sel) -> np.ndarray:
+    """Per-selector seed tweak (numpy).  Accepts scalars or arrays in [0, 3].
+
+    Spelled as a where-chain (not a gather) so the jnp twin lowers to pure
+    VPU selects inside Pallas kernels; both spellings are bit-identical.
+    """
+    sel = np.asarray(sel, dtype=np.uint32) & np.uint32(3)
+    t = np.where(sel == 1, np.uint32(_SEL_TWEAKS[1]), np.uint32(0))
+    t = np.where(sel == 2, np.uint32(_SEL_TWEAKS[2]), t)
+    t = np.where(sel == 3, np.uint32(_SEL_TWEAKS[3]), t)
+    return t.astype(np.uint32)
+
+
+def fingerprint_sel_np(hi: np.ndarray, lo: np.ndarray, sel,
+                       fp_bits: int) -> np.ndarray:
+    """Selector-indexed fingerprint in [1, 2^fp_bits - 1]; sel=0 == static.
+
+    ``sel`` broadcasts against ``hi``/``lo`` (e.g. per-slot selectors of
+    shape [N, bucket_size] against keys of shape [N, 1]).
+    """
+    seed = np.uint32(0xDEADBEEF) ^ sel_tweak_np(sel)
+    h = murmur3_mix_np(lo ^ murmur3_mix_np(hi ^ seed))
+    mask = np.uint32((1 << fp_bits) - 1)
+    fp = (h & mask).astype(np.uint32)
     return np.where(fp == 0, np.uint32(1), fp)
 
 
@@ -120,6 +156,24 @@ def splitmix32(x: jax.Array) -> jax.Array:
 
 def fingerprint(hi: jax.Array, lo: jax.Array, fp_bits: int) -> jax.Array:
     h = murmur3_mix(lo ^ murmur3_mix(hi ^ jnp.uint32(0xDEADBEEF)))
+    fp = h & jnp.uint32((1 << fp_bits) - 1)
+    return jnp.where(fp == 0, jnp.uint32(1), fp)
+
+
+def sel_tweak(sel) -> jax.Array:
+    """jnp twin of ``sel_tweak_np`` (VPU select chain, kernel-safe)."""
+    sel = jnp.asarray(sel).astype(jnp.uint32) & jnp.uint32(3)
+    t = jnp.where(sel == 1, jnp.uint32(_SEL_TWEAKS[1]), jnp.uint32(0))
+    t = jnp.where(sel == 2, jnp.uint32(_SEL_TWEAKS[2]), t)
+    t = jnp.where(sel == 3, jnp.uint32(_SEL_TWEAKS[3]), t)
+    return t
+
+
+def fingerprint_sel(hi: jax.Array, lo: jax.Array, sel,
+                    fp_bits: int) -> jax.Array:
+    """jnp twin of ``fingerprint_sel_np``; sel broadcasts against hi/lo."""
+    seed = jnp.uint32(0xDEADBEEF) ^ sel_tweak(sel)
+    h = murmur3_mix(lo ^ murmur3_mix(hi ^ seed))
     fp = h & jnp.uint32((1 << fp_bits) - 1)
     return jnp.where(fp == 0, jnp.uint32(1), fp)
 

@@ -44,6 +44,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import hashing
 from repro.kernels.rank import rank_among_earlier
+from repro.kernels.selector import fp_family, select_fp, sel_pack, sel_unpack
 
 DEFAULT_BLOCK = 1024
 
@@ -138,6 +139,127 @@ def _delete_bulk_impl(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
     return new_table, ok
 
 
+# ------------------------------------------- selector-aware (adaptive) -----
+
+
+def _clear_round_adaptive(planes, target, active, fam, fp0):
+    """Adaptive clear round: a slot matches when it stores the lane's
+    fingerprint under the SLOT's selector; clearing zeroes all four planes.
+
+    Duplicate rank stays keyed on (bucket, selector-0 fingerprint) — lanes
+    deleting the same key share fp0 whatever the resident slots' selectors
+    are, so the k-th duplicate still clears the k-th matching copy.
+    """
+    table, sel_tbl, khi_t, klo_t = planes
+    buf, _bucket_size = table.shape
+    rank = rank_among_earlier(target, active, fp=fp0)
+    tgt_c = jnp.clip(target, 0, buf - 1)
+    row = table[tgt_c]                                    # [n, bucket_size]
+    match = row == select_fp(fam, sel_tbl[tgt_c])
+    hits = active & (rank < jnp.sum(match, axis=1).astype(jnp.int32))
+    match_pos = jnp.cumsum(match.astype(jnp.int32), axis=1) - 1
+    is_dest = match & (match_pos == rank[:, None])
+    slot = jnp.argmax(is_dest, axis=1)
+    upd_i = jnp.where(hits, target, buf)                  # OOB -> dropped
+    table = table.at[upd_i, slot].set(jnp.uint32(0), mode="drop")
+    sel_tbl = sel_tbl.at[upd_i, slot].set(jnp.uint32(0), mode="drop")
+    khi_t = khi_t.at[upd_i, slot].set(jnp.uint32(0), mode="drop")
+    klo_t = klo_t.at[upd_i, slot].set(jnp.uint32(0), mode="drop")
+    return (table, sel_tbl, khi_t, klo_t), hits
+
+
+def _delete_adaptive_body(table, sels, khi_t, klo_t, hi, lo, valid, n_buckets,
+                          *, fp_bits: int):
+    """Hash family + home/alternate adaptive clear rounds.
+
+    With an all-zero selector plane this is bit-for-bit ``_delete_body`` on
+    the fingerprint plane (selector-0 expected fps == static fps).
+    """
+    bucket_size = table.shape[-1]
+    sel_tbl = sel_unpack(sels, bucket_size)
+    fam = fp_family(hi, lo, fp_bits)
+    fp0 = fam[0]
+    i1 = hashing.index_hash_dyn(hi, lo, n_buckets).astype(jnp.int32)
+    i2 = hashing.alt_index_dyn(i1, fp0, n_buckets).astype(jnp.int32)
+    planes = (table, sel_tbl, khi_t, klo_t)
+    planes, ok1 = _clear_round_adaptive(planes, i1, valid, fam, fp0)
+    planes, ok2 = _clear_round_adaptive(planes, i2, valid & ~ok1, fam, fp0)
+    table, sel_tbl, khi_t, klo_t = planes
+    return table, sel_pack(sel_tbl), khi_t, klo_t, ok1 | ok2
+
+
+def _delete_adaptive_kernel(n_ref, table_in, sels_in, khi_in, klo_in, hi_ref,
+                            lo_ref, valid_ref, table_ref, sels_ref, khi_ref,
+                            klo_ref, ok_ref, *, fp_bits: int):
+    del table_in, sels_in, khi_in, klo_in      # aliased to the outputs
+    table, sels, khi_t, klo_t, ok = _delete_adaptive_body(
+        table_ref[...], sels_ref[...], khi_ref[...], klo_ref[...],
+        hi_ref[...], lo_ref[...], valid_ref[...], n_ref[0, 0],
+        fp_bits=fp_bits)
+    table_ref[...] = table
+    sels_ref[...] = sels
+    khi_ref[...] = khi_t
+    klo_ref[...] = klo_t
+    ok_ref[...] = ok
+
+
+def _delete_adaptive_impl(table, sels, khi_t, klo_t, hi, lo, *, fp_bits: int,
+                          n_buckets=None, valid=None,
+                          block: int = DEFAULT_BLOCK, interpret: bool = True,
+                          emulate: bool = False):
+    n = hi.shape[0]
+    block = min(block, n)
+    assert n % block == 0, f"{n=} not a multiple of {block=}"
+    buffer_buckets, bucket_size = table.shape
+    if n_buckets is None:
+        n_buckets = buffer_buckets
+    if valid is None:
+        valid = jnp.ones((n,), bool)
+    hi = hi.astype(jnp.uint32)
+    lo = lo.astype(jnp.uint32)
+    if emulate:
+        g = n // block
+        if g == 1:
+            return _delete_adaptive_body(table, sels, khi_t, klo_t, hi, lo,
+                                         valid, n_buckets, fp_bits=fp_bits)
+
+        def step(carry, x):
+            t, s, kh, kl = carry
+            t, s, kh, kl, ok = _delete_adaptive_body(t, s, kh, kl, *x,
+                                                     n_buckets,
+                                                     fp_bits=fp_bits)
+            return (t, s, kh, kl), ok
+
+        (table, sels, khi_t, klo_t), ok = jax.lax.scan(
+            step, (table, sels, khi_t, klo_t),
+            (hi.reshape(g, block), lo.reshape(g, block),
+             valid.reshape(g, block)))
+        return table, sels, khi_t, klo_t, ok.reshape(-1)
+    n_arr = jnp.asarray(n_buckets, jnp.int32).reshape(1, 1)
+    grid = (n // block,)
+    smem_spec = pl.BlockSpec((1, 1), lambda i: (0, 0),
+                             memory_space=pltpu.SMEM)
+    key_spec = pl.BlockSpec((block,), lambda i: (i,))
+    table_spec = pl.BlockSpec((buffer_buckets, bucket_size), lambda i: (0, 0))
+    sel_spec = pl.BlockSpec((buffer_buckets, 1), lambda i: (0, 0))
+    out = pl.pallas_call(
+        functools.partial(_delete_adaptive_kernel, fp_bits=fp_bits),
+        grid=grid,
+        in_specs=[smem_spec, table_spec, sel_spec, table_spec, table_spec,
+                  key_spec, key_spec, key_spec],
+        out_specs=[table_spec, sel_spec, table_spec, table_spec,
+                   pl.BlockSpec((block,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct(table.shape, jnp.uint32),
+                   jax.ShapeDtypeStruct((buffer_buckets, 1), jnp.uint32),
+                   jax.ShapeDtypeStruct(table.shape, jnp.uint32),
+                   jax.ShapeDtypeStruct(table.shape, jnp.uint32),
+                   jax.ShapeDtypeStruct((n,), jnp.bool_)],
+        input_output_aliases={1: 0, 2: 1, 3: 2, 4: 3},
+        interpret=interpret,
+    )(n_arr, table, sels, khi_t, klo_t, hi, lo, valid)
+    return out
+
+
 _DELETE_STATICS = ("fp_bits", "block", "interpret", "emulate")
 _delete_bulk_jit = jax.jit(_delete_bulk_impl, static_argnames=_DELETE_STATICS)
 _delete_bulk_donated = jax.jit(_delete_bulk_impl,
@@ -168,3 +290,29 @@ def delete_bulk(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
     fn = _delete_bulk_donated if donate else _delete_bulk_jit
     return fn(table, hi, lo, fp_bits=fp_bits, n_buckets=n_buckets,
               valid=valid, block=block, interpret=interpret, emulate=emulate)
+
+
+_delete_adaptive_jit = jax.jit(_delete_adaptive_impl,
+                               static_argnames=_DELETE_STATICS)
+_delete_adaptive_donated = jax.jit(
+    _delete_adaptive_impl, static_argnames=_DELETE_STATICS,
+    donate_argnames=("table", "sels", "khi_t", "klo_t"))
+
+
+def delete_bulk_adaptive(table, sels, khi_t, klo_t, hi, lo, *, fp_bits: int,
+                         n_buckets=None, valid=None,
+                         block: int = DEFAULT_BLOCK, interpret: bool = True,
+                         emulate: bool = False, donate: bool = False):
+    """Selector-aware bulk delete -> (table, sels, khi, klo, deleted).
+
+    Same contract as ``delete_bulk``; a slot matches under ITS selector
+    (so an adapted resident is still deletable by its key), and clearing
+    zeroes the selector and mirror-key planes along with the fingerprint.
+    Overflow-stash entries hold selector-0 fingerprints — callers compose
+    ``kernels.stash.stash_delete_ref`` for lanes that miss the table,
+    exactly like the static path.
+    """
+    fn = _delete_adaptive_donated if donate else _delete_adaptive_jit
+    return fn(table, sels, khi_t, klo_t, hi, lo, fp_bits=fp_bits,
+              n_buckets=n_buckets, valid=valid, block=block,
+              interpret=interpret, emulate=emulate)

@@ -70,3 +70,59 @@ def fingerprint_hash(hi: jax.Array, lo: jax.Array, *, fp_bits: int,
         interpret=interpret,
     )(hi.astype(jnp.uint32), lo.astype(jnp.uint32))
     return tuple(out)
+
+
+# --------------------------------------- selector-parameterized family ------
+
+
+def _family_body(hi, lo, *, fp_bits: int, n_buckets: int):
+    """All four selector fingerprints + the (selector-independent) bucket
+    pair.  Geometry comes from the selector-0 member — the adaptive-filter
+    invariant that lets a repair rewrite a slot without moving the entry."""
+    fps = [hashing.fingerprint_sel(hi, lo, s, fp_bits)
+           for s in range(hashing.SEL_VARIANTS)]
+    i1 = hashing.index_hash(hi, lo, n_buckets)
+    i2 = hashing.alt_index(i1, fps[0], n_buckets)
+    return fps, i1, i2
+
+
+def _family_kernel(hi_ref, lo_ref, f0_ref, f1_ref, f2_ref, f3_ref, i1_ref,
+                   i2_ref, *, fp_bits: int, n_buckets: int):
+    fps, i1, i2 = _family_body(hi_ref[...], lo_ref[...], fp_bits=fp_bits,
+                               n_buckets=n_buckets)
+    for ref, fp in zip((f0_ref, f1_ref, f2_ref, f3_ref), fps):
+        ref[...] = fp
+    i1_ref[...] = i1
+    i2_ref[...] = i2
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("fp_bits", "n_buckets", "block",
+                                    "interpret", "emulate"))
+def fingerprint_hash_family(hi: jax.Array, lo: jax.Array, *, fp_bits: int,
+                            n_buckets: int, block: int = DEFAULT_BLOCK,
+                            interpret: bool = True, emulate: bool = False):
+    """Selector-aware front half: ((fp0, fp1, fp2, fp3), i1, i2).
+
+    fp0 is bit-identical to ``fingerprint_hash``'s fp (selector 0 == the
+    static fingerprint), and i1/i2 are the same bucket pair — so the static
+    and adaptive data planes agree on where every key lives.
+    """
+    n = hi.shape[0]
+    block = min(block, n)
+    assert n % block == 0, f"{n=} not a multiple of {block=}"
+    if emulate:
+        return _family_body(hi.astype(jnp.uint32), lo.astype(jnp.uint32),
+                            fp_bits=fp_bits, n_buckets=n_buckets)
+    grid = (n // block,)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    out = pl.pallas_call(
+        functools.partial(_family_kernel, fp_bits=fp_bits,
+                          n_buckets=n_buckets),
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=[spec] * 6,
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.uint32)] * 6,
+        interpret=interpret,
+    )(hi.astype(jnp.uint32), lo.astype(jnp.uint32))
+    return tuple(out[:4]), out[4], out[5]

@@ -66,6 +66,7 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core import hashing
 from repro.core.scheduling import dispatch_order
 from repro.kernels.rank import rank_among_earlier
+from repro.kernels.selector import sel_pack, sel_unpack
 from repro.kernels.stash import stash_spill
 
 DEFAULT_BLOCK = 1024
@@ -437,6 +438,380 @@ def insert_bulk(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
     return fn(table, hi, lo, fp_bits=fp_bits, n_buckets=n_buckets,
               valid=valid, evict_rounds=evict_rounds, stash=stash,
               block=block, interpret=interpret, emulate=emulate,
+              schedule=schedule)
+
+
+# ------------------------------------------- selector-aware (adaptive) -----
+#
+# The adaptive insert is the static schedule — same optimistic rounds, same
+# rank discipline, same dirty-slot eviction loop, same stash spill — acting
+# on FOUR planes instead of one: fingerprints, the packed selector plane,
+# and the mirror key planes (see kernels/selector.py).  Two invariants make
+# adaptation compose with eviction chains:
+#
+#   * every slot the insert path writes is a selector-0 entry (placements
+#     and kicks reset sel — movement loses a slot's adaptation, which is the
+#     standard ACF trade: correctness is preserved, the repaired collision
+#     may reappear and be repaired again);
+#   * a kicked victim's NEXT bucket is derived from its mirror key's
+#     selector-0 fingerprint, not from the stored (possibly adapted)
+#     fingerprint — otherwise kicking an adapted slot would teleport the
+#     entry off its candidate pair and manufacture a false negative.
+#
+# With an all-zero selector plane the fingerprint-table trajectory is
+# bit-for-bit ``_insert_body``'s (stored values are all selector-0, and the
+# alt-index of a non-adapted victim equals the static kernel's).
+
+
+def _place_round_adaptive(planes, target, active, fp, khi, klo):
+    """Adaptive placement round: write (fp, sel=0, key) to the rank-th empty
+    slot.  ``planes`` = (table, sel_tbl, khi_t, klo_t), sel_tbl unpacked."""
+    table, sel_tbl, khi_t, klo_t = planes
+    buf, _bucket_size = table.shape
+    rank = rank_among_earlier(target, active)
+    tgt_c = jnp.clip(target, 0, buf - 1)
+    free = jnp.sum(table == 0, axis=1).astype(jnp.int32)
+    fits = active & (rank < free[tgt_c])
+    row = table[tgt_c]
+    empty_pos = jnp.cumsum((row == 0).astype(jnp.int32), axis=1) - 1
+    is_dest = (row == 0) & (empty_pos == rank[:, None])
+    slot = jnp.argmax(is_dest, axis=1)
+    upd_i = jnp.where(fits, target, buf)                  # OOB -> dropped
+    table = table.at[upd_i, slot].set(fp, mode="drop")
+    sel_tbl = sel_tbl.at[upd_i, slot].set(jnp.uint32(0), mode="drop")
+    khi_t = khi_t.at[upd_i, slot].set(khi, mode="drop")
+    klo_t = klo_t.at[upd_i, slot].set(klo, mode="drop")
+    return (table, sel_tbl, khi_t, klo_t), fits
+
+
+def _evict_rounds_adaptive(planes, hi, lo, start_bucket, residue, n_buckets,
+                           rounds: int, *, fp_bits: int, stash=None):
+    """Bounded eviction rounds over the four adaptive planes.
+
+    Lanes carry the KEY (hi, lo) — the carried fingerprint is always its
+    selector-0 member, recomputed per round, and spills park that
+    selector-0 fingerprint (the identity ``stash_match`` probes).  The
+    chain history records each kicked slot's ORIGINAL four-plane contents;
+    since the dirty discipline gives a failed lane exclusive ownership of
+    its kicked slots, restoring originals is exactly the static kernel's
+    newest-first unwind (which reconstructs the same values chain-step by
+    chain-step), including an adapted victim's original selector.
+    """
+    table, sel_tbl, khi_t, klo_t = planes
+    buf, bucket_size = table.shape
+    n = hi.shape[0]
+    slot_iota = jax.lax.broadcasted_iota(jnp.int32, (n, bucket_size), 1)
+
+    def round_body(carry):
+        (r, planes, dirty, chi, clo, bucket, active, steps, hist) = carry
+        cfp = hashing.fingerprint(chi, clo, fp_bits)
+        planes, placed = _place_round_adaptive(planes, bucket, active, cfp,
+                                               chi, clo)
+        active = active & ~placed
+        table, sel_tbl, khi_t, klo_t = planes
+        hb, hs, hfp, hsel, hhi, hlo = hist
+
+        def release(t, dirty):
+            has = placed & (t < steps)
+            upd_i = jnp.where(has, hb[:, t], buf)
+            return dirty.at[upd_i, hs[:, t]].set(False, mode="drop")
+
+        dirty = jax.lax.cond(
+            jnp.any(placed & (steps > 0)),
+            lambda d: jax.lax.fori_loop(0, r + 1, release, d),
+            lambda d: d, dirty)
+        first = active & (rank_among_earlier(bucket, active) == 0)
+        b_c = jnp.clip(bucket, 0, buf - 1)
+        pos = (slot_iota + (steps % bucket_size)[:, None]) % bucket_size
+        cand_free = ~jnp.take_along_axis(dirty[b_c], pos, axis=1)
+        kick = first & jnp.any(cand_free, axis=1)
+        k = jnp.argmax(cand_free, axis=1)
+        slot = jnp.take_along_axis(pos, k[:, None], axis=1)[:, 0]
+        # Victim's original contents, all four planes (rollback restores
+        # these verbatim; the mirror key re-derives its chase geometry).
+        vfp = table[b_c, slot]
+        vsel = sel_tbl[b_c, slot]
+        vhi = khi_t[b_c, slot]
+        vlo = klo_t[b_c, slot]
+        upd_i = jnp.where(kick, bucket, buf)              # OOB -> dropped
+        table = table.at[upd_i, slot].set(cfp, mode="drop")
+        sel_tbl = sel_tbl.at[upd_i, slot].set(jnp.uint32(0), mode="drop")
+        khi_t = khi_t.at[upd_i, slot].set(chi, mode="drop")
+        klo_t = klo_t.at[upd_i, slot].set(clo, mode="drop")
+        dirty = dirty.at[upd_i, slot].set(True, mode="drop")
+        onehot = (jax.lax.broadcasted_iota(jnp.int32, (n, rounds), 1)
+                  == steps[:, None]) & kick[:, None]
+        hb = jnp.where(onehot, bucket[:, None], hb)
+        hs = jnp.where(onehot, slot[:, None], hs)
+        hfp = jnp.where(onehot, vfp[:, None], hfp)
+        hsel = jnp.where(onehot, vsel[:, None], hsel)
+        hhi = jnp.where(onehot, vhi[:, None], hhi)
+        hlo = jnp.where(onehot, vlo[:, None], hlo)
+        # Chase the victim to ITS alternate bucket — selector-0 geometry
+        # from the mirror key (the stored fp may be an adapted member).
+        vfp0 = hashing.fingerprint(vhi, vlo, fp_bits)
+        nxt = hashing.alt_index_dyn(b_c, vfp0, n_buckets).astype(jnp.int32)
+        chi = jnp.where(kick, vhi, chi)
+        clo = jnp.where(kick, vlo, clo)
+        bucket = jnp.where(kick, nxt, bucket)
+        steps = steps + kick.astype(jnp.int32)
+        return (r + 1, (table, sel_tbl, khi_t, klo_t), dirty, chi, clo,
+                bucket, active, steps, (hb, hs, hfp, hsel, hhi, hlo))
+
+    def round_cond(carry):
+        r, _p, _d, _chi, _clo, _b, active, *_ = carry
+        return (r < rounds) & jnp.any(active)
+
+    hist0 = (jnp.zeros((n, rounds), jnp.int32),
+             jnp.zeros((n, rounds), jnp.int32),
+             jnp.zeros((n, rounds), jnp.uint32),
+             jnp.zeros((n, rounds), jnp.uint32),
+             jnp.zeros((n, rounds), jnp.uint32),
+             jnp.zeros((n, rounds), jnp.uint32))
+    init = (jnp.int32(0), planes, jnp.zeros(table.shape, jnp.bool_),
+            hi, lo, start_bucket, residue, jnp.zeros((n,), jnp.int32), hist0)
+    (_r, planes, _dirty, chi, clo, bucket, active, steps,
+     hist) = jax.lax.while_loop(round_cond, round_body, init)
+    table, sel_tbl, khi_t, klo_t = planes
+    hb, hs, hfp, hsel, hhi, hlo = hist
+
+    if stash is not None:
+        cfp = hashing.fingerprint(chi, clo, fp_bits)
+        stash, spilled = stash_spill(stash, cfp, bucket, active)
+        active = active & ~spilled
+
+    failed = active
+
+    def rb_body(k, planes):
+        table, sel_tbl, khi_t, klo_t = planes
+        t = steps - 1 - k
+        do = failed & (t >= 0)
+        t_c = jnp.clip(t, 0, rounds - 1)[:, None]
+        b = jnp.take_along_axis(hb, t_c, axis=1)[:, 0]
+        s = jnp.take_along_axis(hs, t_c, axis=1)[:, 0]
+        upd_i = jnp.where(do, b, buf)
+        table = table.at[upd_i, s].set(
+            jnp.take_along_axis(hfp, t_c, axis=1)[:, 0], mode="drop")
+        sel_tbl = sel_tbl.at[upd_i, s].set(
+            jnp.take_along_axis(hsel, t_c, axis=1)[:, 0], mode="drop")
+        khi_t = khi_t.at[upd_i, s].set(
+            jnp.take_along_axis(hhi, t_c, axis=1)[:, 0], mode="drop")
+        klo_t = klo_t.at[upd_i, s].set(
+            jnp.take_along_axis(hlo, t_c, axis=1)[:, 0], mode="drop")
+        return table, sel_tbl, khi_t, klo_t
+
+    planes = jax.lax.cond(
+        jnp.any(failed),
+        lambda p: jax.lax.fori_loop(0, rounds, rb_body, p),
+        lambda p: p, (table, sel_tbl, khi_t, klo_t))
+    if stash is not None:
+        return planes, stash, residue & ~failed
+    return planes, residue & ~failed
+
+
+def _insert_adaptive_body(table, sels, khi_t, klo_t, stash, hi, lo, valid,
+                          n_buckets, *, fp_bits: int, evict_rounds: int):
+    """Optimistic + eviction rounds over the four adaptive planes.
+
+    ``sels`` is the PACKED plane; pack∘unpack is the identity, so per-block
+    repacking keeps the pallas grid and the emulation scan bit-for-bit.
+    """
+    bucket_size = table.shape[-1]
+    sel_tbl = sel_unpack(sels, bucket_size)
+    fp = hashing.fingerprint(hi, lo, fp_bits)
+    i1 = hashing.index_hash_dyn(hi, lo, n_buckets).astype(jnp.int32)
+    i2 = hashing.alt_index_dyn(i1, fp, n_buckets).astype(jnp.int32)
+    planes = (table, sel_tbl, khi_t, klo_t)
+    planes, ok1 = _place_round_adaptive(planes, i1, valid, fp, hi, lo)
+    planes, ok2 = _place_round_adaptive(planes, i2, valid & ~ok1, fp, hi, lo)
+    ok = ok1 | ok2
+    if evict_rounds > 0:
+        if stash is None:
+            planes, completed = _evict_rounds_adaptive(
+                planes, hi, lo, i2, valid & ~ok, n_buckets, evict_rounds,
+                fp_bits=fp_bits)
+        else:
+            planes, stash, completed = _evict_rounds_adaptive(
+                planes, hi, lo, i2, valid & ~ok, n_buckets, evict_rounds,
+                fp_bits=fp_bits, stash=stash)
+        ok = ok | completed
+    elif stash is not None:
+        stash, spilled = stash_spill(stash, fp, i2, valid & ~ok)
+        ok = ok | spilled
+    table, sel_tbl, khi_t, klo_t = planes
+    return table, sel_pack(sel_tbl), khi_t, klo_t, stash, ok
+
+
+def _insert_adaptive_kernel(n_ref, table_in, sels_in, khi_in, klo_in, hi_ref,
+                            lo_ref, valid_ref, table_ref, sels_ref, khi_ref,
+                            klo_ref, ok_ref, *, fp_bits: int,
+                            evict_rounds: int):
+    del table_in, sels_in, khi_in, klo_in      # aliased to the outputs
+    table, sels, khi_t, klo_t, _stash, ok = _insert_adaptive_body(
+        table_ref[...], sels_ref[...], khi_ref[...], klo_ref[...], None,
+        hi_ref[...], lo_ref[...], valid_ref[...], n_ref[0, 0],
+        fp_bits=fp_bits, evict_rounds=evict_rounds)
+    table_ref[...] = table
+    sels_ref[...] = sels
+    khi_ref[...] = khi_t
+    klo_ref[...] = klo_t
+    ok_ref[...] = ok
+
+
+def _insert_adaptive_stash_kernel(n_ref, table_in, sels_in, khi_in, klo_in,
+                                  stash_in, hi_ref, lo_ref, valid_ref,
+                                  table_ref, sels_ref, khi_ref, klo_ref,
+                                  stash_ref, ok_ref, *, fp_bits: int,
+                                  evict_rounds: int):
+    del table_in, sels_in, khi_in, klo_in, stash_in    # aliased to outputs
+    table, sels, khi_t, klo_t, stash, ok = _insert_adaptive_body(
+        table_ref[...], sels_ref[...], khi_ref[...], klo_ref[...],
+        stash_ref[...], hi_ref[...], lo_ref[...], valid_ref[...], n_ref[0, 0],
+        fp_bits=fp_bits, evict_rounds=evict_rounds)
+    table_ref[...] = table
+    sels_ref[...] = sels
+    khi_ref[...] = khi_t
+    klo_ref[...] = klo_t
+    stash_ref[...] = stash
+    ok_ref[...] = ok
+
+
+def _emulated_insert_adaptive(table, sels, khi_t, klo_t, stash, hi, lo, valid,
+                              n_buckets, *, fp_bits: int, evict_rounds: int,
+                              block: int):
+    """The adaptive kernel schedule as a compiled XLA scan (the off-TPU
+    path) — same ``_insert_adaptive_body`` per block, planes carried."""
+    g = hi.shape[0] // block
+    if g == 1:
+        return _insert_adaptive_body(table, sels, khi_t, klo_t, stash, hi,
+                                     lo, valid, n_buckets, fp_bits=fp_bits,
+                                     evict_rounds=evict_rounds)
+    xs = (hi.reshape(g, block), lo.reshape(g, block), valid.reshape(g, block))
+
+    if stash is None:
+        def step(carry, x):
+            t, s, kh, kl = carry
+            t, s, kh, kl, _stash, ok = _insert_adaptive_body(
+                t, s, kh, kl, None, *x, n_buckets, fp_bits=fp_bits,
+                evict_rounds=evict_rounds)
+            return (t, s, kh, kl), ok
+
+        (table, sels, khi_t, klo_t), ok = jax.lax.scan(
+            step, (table, sels, khi_t, klo_t), xs)
+        return table, sels, khi_t, klo_t, None, ok.reshape(-1)
+
+    def step(carry, x):
+        t, s, kh, kl, st = carry
+        t, s, kh, kl, st, ok = _insert_adaptive_body(
+            t, s, kh, kl, st, *x, n_buckets, fp_bits=fp_bits,
+            evict_rounds=evict_rounds)
+        return (t, s, kh, kl, st), ok
+
+    (table, sels, khi_t, klo_t, stash), ok = jax.lax.scan(
+        step, (table, sels, khi_t, klo_t, stash), xs)
+    return table, sels, khi_t, klo_t, stash, ok.reshape(-1)
+
+
+def _insert_adaptive_impl(table, sels, khi_t, klo_t, hi, lo, *, fp_bits: int,
+                          n_buckets=None, valid=None,
+                          evict_rounds: int = DEFAULT_EVICT_ROUNDS,
+                          stash=None, block: int = DEFAULT_BLOCK,
+                          interpret: bool = True, emulate: bool = False,
+                          schedule: bool = False):
+    n = hi.shape[0]
+    block = min(block, n)
+    assert n % block == 0, f"{n=} not a multiple of {block=}"
+    buffer_buckets, bucket_size = table.shape
+    if n_buckets is None:
+        n_buckets = buffer_buckets
+    if valid is None:
+        valid = jnp.ones((n,), bool)
+    hi = hi.astype(jnp.uint32)
+    lo = lo.astype(jnp.uint32)
+    schedule = schedule and n > block
+    if schedule:
+        perm, inv = dispatch_order(hi, lo, valid, n_buckets=n_buckets)
+        hi, lo, valid = hi[perm], lo[perm], valid[perm]
+    if emulate:
+        table, sels, khi_t, klo_t, stash, ok = _emulated_insert_adaptive(
+            table, sels, khi_t, klo_t, stash, hi, lo, valid, n_buckets,
+            fp_bits=fp_bits, evict_rounds=evict_rounds, block=block)
+        if schedule:
+            ok = ok[inv]
+        if stash is None:
+            return table, sels, khi_t, klo_t, ok
+        return table, sels, khi_t, klo_t, stash, ok
+    n_arr = jnp.asarray(n_buckets, jnp.int32).reshape(1, 1)
+    grid = (n // block,)
+    smem_spec = pl.BlockSpec((1, 1), lambda i: (0, 0),
+                             memory_space=pltpu.SMEM)
+    key_spec = pl.BlockSpec((block,), lambda i: (i,))
+    table_spec = pl.BlockSpec((buffer_buckets, bucket_size), lambda i: (0, 0))
+    sel_spec = pl.BlockSpec((buffer_buckets, 1), lambda i: (0, 0))
+    ok_spec = pl.BlockSpec((block,), lambda i: (i,))
+    plane_shapes = [jax.ShapeDtypeStruct(table.shape, jnp.uint32),
+                    jax.ShapeDtypeStruct((buffer_buckets, 1), jnp.uint32),
+                    jax.ShapeDtypeStruct(table.shape, jnp.uint32),
+                    jax.ShapeDtypeStruct(table.shape, jnp.uint32)]
+    if stash is None:
+        out = pl.pallas_call(
+            functools.partial(_insert_adaptive_kernel, fp_bits=fp_bits,
+                              evict_rounds=evict_rounds),
+            grid=grid,
+            in_specs=[smem_spec, table_spec, sel_spec, table_spec, table_spec,
+                      key_spec, key_spec, key_spec],
+            out_specs=[table_spec, sel_spec, table_spec, table_spec, ok_spec],
+            out_shape=plane_shapes + [jax.ShapeDtypeStruct((n,), jnp.bool_)],
+            # all four planes update in place across grid steps
+            input_output_aliases={1: 0, 2: 1, 3: 2, 4: 3},
+            interpret=interpret,
+        )(n_arr, table, sels, khi_t, klo_t, hi, lo, valid)
+        table, sels, khi_t, klo_t, ok = out
+        return table, sels, khi_t, klo_t, ok[inv] if schedule else ok
+    stash_spec = pl.BlockSpec(stash.shape, lambda i: (0, 0))
+    out = pl.pallas_call(
+        functools.partial(_insert_adaptive_stash_kernel, fp_bits=fp_bits,
+                          evict_rounds=evict_rounds),
+        grid=grid,
+        in_specs=[smem_spec, table_spec, sel_spec, table_spec, table_spec,
+                  stash_spec, key_spec, key_spec, key_spec],
+        out_specs=[table_spec, sel_spec, table_spec, table_spec, stash_spec,
+                   ok_spec],
+        out_shape=plane_shapes + [
+            jax.ShapeDtypeStruct(stash.shape, stash.dtype),
+            jax.ShapeDtypeStruct((n,), jnp.bool_)],
+        input_output_aliases={1: 0, 2: 1, 3: 2, 4: 3, 5: 4},
+        interpret=interpret,
+    )(n_arr, table, sels, khi_t, klo_t, stash, hi, lo, valid)
+    table, sels, khi_t, klo_t, stash, ok = out
+    return table, sels, khi_t, klo_t, stash, ok[inv] if schedule else ok
+
+
+_insert_adaptive_jit = jax.jit(_insert_adaptive_impl,
+                               static_argnames=_INSERT_STATICS)
+_insert_adaptive_donated = jax.jit(
+    _insert_adaptive_impl, static_argnames=_INSERT_STATICS,
+    donate_argnames=("table", "sels", "khi_t", "klo_t", "stash"))
+
+
+def insert_bulk_adaptive(table, sels, khi_t, klo_t, hi, lo, *, fp_bits: int,
+                         n_buckets=None, valid=None,
+                         evict_rounds: int = DEFAULT_EVICT_ROUNDS, stash=None,
+                         block: int = DEFAULT_BLOCK, interpret: bool = True,
+                         emulate: bool = False, schedule: bool = False,
+                         donate: bool = False):
+    """Selector-aware bulk insert over the four adaptive planes
+    -> (table, sels, khi, klo, placed) or (..., stash, placed).
+
+    Same contract and knobs as ``insert_bulk``; new entries land as
+    selector-0 slots with their key mirrored, kicks reset the victim's
+    selector (re-deriving its chase geometry from the mirror key), and
+    rollback restores all four planes verbatim.
+    """
+    fn = _insert_adaptive_donated if donate else _insert_adaptive_jit
+    return fn(table, sels, khi_t, klo_t, hi, lo, fp_bits=fp_bits,
+              n_buckets=n_buckets, valid=valid, evict_rounds=evict_rounds,
+              stash=stash, block=block, interpret=interpret, emulate=emulate,
               schedule=schedule)
 
 

@@ -30,11 +30,16 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.delete import delete_bulk
-from repro.kernels.fingerprint import fingerprint_hash
+from repro.kernels.delete import delete_bulk, delete_bulk_adaptive
+from repro.kernels.fingerprint import fingerprint_hash, fingerprint_hash_family
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.insert import DEFAULT_EVICT_ROUNDS, insert_bulk, insert_once
-from repro.kernels.probe import probe, probe_emulated, probe_multi
+from repro.kernels.insert import (DEFAULT_EVICT_ROUNDS, insert_bulk,
+                                  insert_bulk_adaptive, insert_once)
+from repro.kernels.probe import (probe, probe_adaptive,
+                                 probe_adaptive_emulated, probe_emulated,
+                                 probe_multi)
+from repro.kernels.selector import (make_key_planes, make_sel_plane,
+                                    report_adapt)
 from repro.kernels.stash import (DEFAULT_STASH_SLOTS, make_stash,
                                  stash_delete_ref, stash_occupancy,
                                  stash_probe_ref, stash_spill_ref)
@@ -470,6 +475,164 @@ def filter_delete(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
     return new_table, stash, ok | cleared
 
 
+# ------------------------------------------------- adaptive dispatch -------
+#
+# The adaptive filter's state is FOUR planes (fingerprint table + packed
+# selector column + two mirror-key planes), all pinned block-resident by the
+# selector-aware kernels.  Dispatch reuses the static footprint model with
+# the plane-scaled table bytes; there is no separate jnp oracle arm — the
+# XLA grid emulation (the same kernel body as one compiled scan) IS the
+# fallback, so a batch the VMEM model rejects still runs as compiled XLA
+# over HBM instead of dropping to interpret mode.
+
+
+def _adaptive_plane_bytes(table: jax.Array) -> int:
+    """VMEM bytes of the four adaptive planes (fp + khi + klo at table
+    shape, plus the packed selector column)."""
+    return 3 * table.size * 4 + table.shape[0] * 4
+
+
+def adaptive_lookup(table: jax.Array, sels: jax.Array, hi: jax.Array,
+                    lo: jax.Array, *, fp_bits: int, n_buckets=None,
+                    stash=None, use_pallas: str = "auto") -> jax.Array:
+    """Selector-aware bulk membership -> bool[N].
+
+    A slot hits when its stored fingerprint equals the query's family
+    fingerprint **under that slot's selector**; stash entries always hold
+    selector-0 fingerprints and are matched in the same pass.
+    """
+    if hi.shape[0] == 0:
+        return jnp.zeros((0,), jnp.bool_)
+    table_bytes = _adaptive_plane_bytes(table)
+    stash_slots = 0 if stash is None else stash.shape[1]
+    block = min(autotune_block("probe", table_bytes=table_bytes,
+                               stash_slots=stash_slots), hi.shape[0])
+    kernel = _use_kernel(use_pallas,
+                         vmem_bytes=kernel_vmem_bytes(
+                             "probe", table_bytes=table_bytes, block=block,
+                             stash_slots=stash_slots),
+                         n_keys=hi.shape[0])
+    if not kernel or _emulate():
+        if n_buckets is None:
+            n_buckets = table.shape[0]
+        return probe_adaptive_emulated(table, sels, hi.astype(jnp.uint32),
+                                       lo.astype(jnp.uint32), n_buckets,
+                                       stash, fp_bits=fp_bits)
+    hi_p, n = _pad_to(hi, block)
+    lo_p, _ = _pad_to(lo, block)
+    hit = probe_adaptive(table, sels, hi_p, lo_p, fp_bits=fp_bits,
+                         n_buckets=n_buckets, stash=stash, block=block,
+                         interpret=False)
+    return _unpad(hit, n)
+
+
+def adaptive_insert(table: jax.Array, sels: jax.Array, khi_t: jax.Array,
+                    klo_t: jax.Array, hi: jax.Array, lo: jax.Array, *,
+                    fp_bits: int, n_buckets=None, valid=None,
+                    evict_rounds: int = 0, stash=None,
+                    use_pallas: str = "auto", schedule: bool = False,
+                    donate: bool = False):
+    """Fused bulk insert over the adaptive planes
+    -> (table, sels, khi, klo, placed) or (..., stash, placed).
+
+    Same contract as ``filter_insert``; placements and kicks write
+    selector-0 entries with the key mirrored into khi/klo, so eviction
+    chains re-derive victim geometry exactly and rollback restores all
+    four planes verbatim.
+    """
+    if hi.shape[0] == 0:
+        empty_ok = jnp.zeros((0,), jnp.bool_)
+        return ((table, sels, khi_t, klo_t, empty_ok) if stash is None
+                else (table, sels, khi_t, klo_t, stash, empty_ok))
+    if valid is None:
+        valid = jnp.ones(hi.shape, bool)
+    table_bytes = _adaptive_plane_bytes(table)
+    stash_slots = 0 if stash is None else stash.shape[1]
+    # The adaptive chain history carries 6 per-lane arrays (slot coords plus
+    # the kicked slot's original fp/sel/key), vs the static kernel's 3 —
+    # doubling evict_rounds in the footprint model accounts for them.
+    block = min(autotune_block("insert", table_bytes=table_bytes,
+                               evict_rounds=2 * evict_rounds,
+                               stash_slots=stash_slots,
+                               n_keys=hi.shape[0]), hi.shape[0])
+    kernel = _use_kernel(use_pallas,
+                         vmem_bytes=kernel_vmem_bytes(
+                             "insert", table_bytes=table_bytes, block=block,
+                             evict_rounds=2 * evict_rounds,
+                             stash_slots=stash_slots),
+                         n_keys=hi.shape[0])
+    emul = (not kernel) or _emulate()
+    hi_p, n = _pad_to(hi, block)
+    lo_p, _ = _pad_to(lo, block)
+    valid_p, _ = _pad_to(valid, block)   # pads False: never touches planes
+    out = insert_bulk_adaptive(table, sels, khi_t, klo_t, hi_p, lo_p,
+                               fp_bits=fp_bits, n_buckets=n_buckets,
+                               valid=valid_p, evict_rounds=evict_rounds,
+                               stash=stash, block=block,
+                               interpret=not _on_tpu(), emulate=emul,
+                               schedule=schedule, donate=donate)
+    return (*out[:-1], _unpad(out[-1], n))
+
+
+def adaptive_delete(table: jax.Array, sels: jax.Array, khi_t: jax.Array,
+                    klo_t: jax.Array, hi: jax.Array, lo: jax.Array, *,
+                    fp_bits: int, n_buckets=None, valid=None, stash=None,
+                    use_pallas: str = "auto", donate: bool = False):
+    """Fused bulk delete over the adaptive planes
+    -> (table, sels, khi, klo, deleted) or (..., stash, deleted).
+
+    Slots are matched under THEIR selector (adapted residents stay
+    deletable); clearing zeroes all four planes.  Stash entries hold
+    selector-0 fingerprints, so lanes that miss the table compose the same
+    jnp ``stash_delete_ref`` pass as the static path.
+    """
+    if hi.shape[0] == 0:
+        empty_ok = jnp.zeros((0,), jnp.bool_)
+        return ((table, sels, khi_t, klo_t, empty_ok) if stash is None
+                else (table, sels, khi_t, klo_t, stash, empty_ok))
+    if valid is None:
+        valid = jnp.ones(hi.shape, bool)
+    table_bytes = _adaptive_plane_bytes(table)
+    block = min(autotune_block("delete", table_bytes=table_bytes,
+                               n_keys=hi.shape[0]), hi.shape[0])
+    kernel = _use_kernel(use_pallas,
+                         vmem_bytes=kernel_vmem_bytes(
+                             "delete", table_bytes=table_bytes, block=block),
+                         n_keys=hi.shape[0])
+    emul = (not kernel) or _emulate()
+    hi_p, n = _pad_to(hi, block)
+    lo_p, _ = _pad_to(lo, block)
+    valid_p, _ = _pad_to(valid, block)   # pads False: never touches planes
+    table, sels, khi_t, klo_t, ok = delete_bulk_adaptive(
+        table, sels, khi_t, klo_t, hi_p, lo_p, fp_bits=fp_bits,
+        n_buckets=n_buckets, valid=valid_p, block=block,
+        interpret=not _on_tpu(), emulate=emul, donate=donate)
+    ok = _unpad(ok, n)
+    if stash is None:
+        return table, sels, khi_t, klo_t, ok
+    nb = table.shape[0] if n_buckets is None else n_buckets
+    stash, cleared = stash_delete_ref(stash, hi, lo, valid & ~ok,
+                                      fp_bits=fp_bits, n_buckets=nb)
+    return table, sels, khi_t, klo_t, stash, ok | cleared
+
+
+@functools.partial(jax.jit, static_argnames=("fp_bits",))
+def adaptive_report(table: jax.Array, sels: jax.Array, khi_t: jax.Array,
+                    klo_t: jax.Array, hi: jax.Array, lo: jax.Array, *,
+                    fp_bits: int, n_buckets, valid=None):
+    """Jitted confirmed-false-positive feedback pass
+    -> (table, sels, adapted bool[N], resident bool[N]).
+
+    Reports are rare control-plane events; the sequential ``report_adapt``
+    scan (exact python-oracle semantics) needs no kernel arm.
+    """
+    if valid is None:
+        valid = jnp.ones(hi.shape, bool)
+    return report_adapt(table, sels, khi_t, klo_t, hi.astype(jnp.uint32),
+                        lo.astype(jnp.uint32), valid, fp_bits=fp_bits,
+                        n_buckets=n_buckets)
+
+
 def attention(q, k, v, *, causal: bool = True, window: int | None = None,
               logit_softcap: float | None = None, scale: float | None = None,
               qpos_start=None, valid_len=None, key_positions=None,
@@ -499,7 +662,10 @@ def attention(q, k, v, *, causal: bool = True, window: int | None = None,
 
 __all__ = ["hash_keys", "filter_lookup", "filter_lookup_multi",
            "filter_insert", "filter_delete", "attention", "fingerprint_hash",
-           "probe", "probe_multi", "insert_once", "insert_bulk",
-           "delete_bulk", "flash_attention", "kernel_vmem_bytes",
-           "autotune_block", "VMEM_TABLE_BUDGET", "DEFAULT_EVICT_ROUNDS",
-           "DEFAULT_STASH_SLOTS", "make_stash", "stash_occupancy"]
+           "fingerprint_hash_family", "probe", "probe_multi", "insert_once",
+           "insert_bulk", "delete_bulk", "flash_attention",
+           "kernel_vmem_bytes", "autotune_block", "VMEM_TABLE_BUDGET",
+           "DEFAULT_EVICT_ROUNDS", "DEFAULT_STASH_SLOTS", "make_stash",
+           "stash_occupancy", "adaptive_lookup", "adaptive_insert",
+           "adaptive_delete", "adaptive_report", "make_sel_plane",
+           "make_key_planes"]

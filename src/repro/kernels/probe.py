@@ -32,6 +32,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import hashing
+from repro.kernels.selector import fp_family, select_fp, sel_unpack
 from repro.kernels.stash import stash_match
 
 DEFAULT_BLOCK = 1024
@@ -139,6 +140,121 @@ def probe_emulated(table: jax.Array, hi: jax.Array, lo: jax.Array,
     """
     return _probe_body(table, stash, hi, lo, n_buckets, fp_bits=fp_bits,
                        array_table=True)
+
+
+# --------------------------------------------- selector-aware probe ---------
+
+
+def _probe_adaptive_body(table_ref, sel_ref, stash, hi, lo, n_buckets, *,
+                         fp_bits: int, array_table: bool = False):
+    """Adaptive lookup: compare each slot against the fingerprint the slot's
+    selector chose (``kernels/selector.py``).
+
+    Bucket geometry (i1, i2) always comes from the selector-0 fingerprint —
+    adaptation rewrites what a slot *stores*, never where the entry *lives*
+    — so the candidate pair of a key is stable across repairs.  The stash
+    holds selector-0 fingerprints (spills reset adaptation), so the stash
+    compare is unchanged.  With an all-zero selector plane this body is
+    bit-for-bit ``_probe_body``.
+    """
+    fam = fp_family(hi, lo, fp_bits)
+    fp0 = fam[0]
+    i1 = hashing.index_hash_dyn(hi, lo, n_buckets)
+    i2 = hashing.alt_index_dyn(i1, fp0, n_buckets)
+    bucket_size = table_ref.shape[-1]
+    if array_table:
+        b1 = table_ref.at[i1].get(mode="promise_in_bounds")
+        b2 = table_ref.at[i2].get(mode="promise_in_bounds")
+        s1 = sel_ref.at[i1].get(mode="promise_in_bounds")
+        s2 = sel_ref.at[i2].get(mode="promise_in_bounds")
+    else:
+        b1 = table_ref[i1.astype(jnp.int32), :]
+        b2 = table_ref[i2.astype(jnp.int32), :]
+        s1 = sel_ref[i1.astype(jnp.int32), :]
+        s2 = sel_ref[i2.astype(jnp.int32), :]
+    e1 = select_fp(fam, sel_unpack(s1, bucket_size))
+    e2 = select_fp(fam, sel_unpack(s2, bucket_size))
+    hit = jnp.any(b1 == e1, axis=-1) | jnp.any(b2 == e2, axis=-1)
+    if stash is not None:
+        hit = hit | stash_match(stash, fp0, i1, i2)
+    return hit
+
+
+def _probe_adaptive_kernel(n_ref, table_ref, sel_ref, hi_ref, lo_ref, hit_ref,
+                           *, fp_bits: int):
+    hit_ref[...] = _probe_adaptive_body(table_ref, sel_ref, None, hi_ref[...],
+                                        lo_ref[...], n_ref[0, 0],
+                                        fp_bits=fp_bits)
+
+
+def _probe_adaptive_stash_kernel(n_ref, table_ref, sel_ref, stash_ref, hi_ref,
+                                 lo_ref, hit_ref, *, fp_bits: int):
+    hit_ref[...] = _probe_adaptive_body(table_ref, sel_ref, stash_ref[...],
+                                        hi_ref[...], lo_ref[...], n_ref[0, 0],
+                                        fp_bits=fp_bits)
+
+
+@functools.partial(jax.jit, static_argnames=("fp_bits", "block", "interpret",
+                                             "emulate"))
+def probe_adaptive(table: jax.Array, sels: jax.Array, hi: jax.Array,
+                   lo: jax.Array, *, fp_bits: int, n_buckets=None, stash=None,
+                   block: int = DEFAULT_BLOCK, interpret: bool = True,
+                   emulate: bool = False) -> jax.Array:
+    """Selector-aware bulk membership test -> bool[N].
+
+    Same contract as ``probe`` plus ``sels``: the packed per-slot selector
+    plane ``uint32[buffer_buckets, 1]`` riding block-resident beside the
+    table (2 bits/slot; +1/16th of a table of VMEM at bucket_size 4).
+    """
+    n = hi.shape[0]
+    block = min(block, n)
+    assert n % block == 0, f"{n=} not a multiple of {block=}"
+    buffer_buckets, bucket_size = table.shape
+    if n_buckets is None:
+        n_buckets = buffer_buckets
+    if emulate:
+        return _probe_adaptive_body(table, sels, stash, hi.astype(jnp.uint32),
+                                    lo.astype(jnp.uint32), n_buckets,
+                                    fp_bits=fp_bits, array_table=True)
+    n_arr = jnp.asarray(n_buckets, jnp.int32).reshape(1, 1)
+    grid = (n // block,)
+    smem_spec = pl.BlockSpec((1, 1), lambda i: (0, 0),
+                             memory_space=pltpu.SMEM)
+    key_spec = pl.BlockSpec((block,), lambda i: (i,))
+    table_spec = pl.BlockSpec((buffer_buckets, bucket_size), lambda i: (0, 0))
+    sel_spec = pl.BlockSpec((buffer_buckets, 1), lambda i: (0, 0))
+    out_spec = pl.BlockSpec((block,), lambda i: (i,))
+    out_shape = jax.ShapeDtypeStruct((n,), jnp.bool_)
+    if stash is None:
+        return pl.pallas_call(
+            functools.partial(_probe_adaptive_kernel, fp_bits=fp_bits),
+            grid=grid,
+            in_specs=[smem_spec, table_spec, sel_spec, key_spec, key_spec],
+            out_specs=out_spec,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(n_arr, table, sels, hi.astype(jnp.uint32), lo.astype(jnp.uint32))
+    stash_spec = pl.BlockSpec(stash.shape, lambda i: (0, 0))
+    return pl.pallas_call(
+        functools.partial(_probe_adaptive_stash_kernel, fp_bits=fp_bits),
+        grid=grid,
+        in_specs=[smem_spec, table_spec, sel_spec, stash_spec, key_spec,
+                  key_spec],
+        out_specs=out_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(n_arr, table, sels, stash, hi.astype(jnp.uint32),
+      lo.astype(jnp.uint32))
+
+
+@functools.partial(jax.jit, static_argnames=("fp_bits",))
+def probe_adaptive_emulated(table: jax.Array, sels: jax.Array, hi: jax.Array,
+                            lo: jax.Array, n_buckets, stash, *,
+                            fp_bits: int) -> jax.Array:
+    """Positional-arg fast path for the emulated adaptive probe (the
+    adaptive serving lookup's analogue of ``probe_emulated``)."""
+    return _probe_adaptive_body(table, sels, stash, hi, lo, n_buckets,
+                                fp_bits=fp_bits, array_table=True)
 
 
 # ----------------------------------------------- multi-generation probe ----

@@ -1,0 +1,162 @@
+"""Per-slot hash-selector plane — shared math for the adaptive filter kernels.
+
+The adaptivity mechanism (Kopelowitz–McCauley–Porat, "Support Optimality and
+Adaptive Cuckoo Filters") gives every occupied slot a 2-bit **selector**
+choosing which member of a 4-hash fingerprint family the slot stores:
+
+    stored[b, s] == fingerprint_sel(resident_key, sel[b, s])
+
+A confirmed false positive on query q at slot (b, s) is repaired by bumping
+``sel[b, s]`` and rewriting the slot under the resident's *next* fingerprint
+— the entry never moves, its candidate bucket pair never changes (bucket
+geometry is always derived from the selector-0 fingerprint), but the
+(q, slot) collision is gone for every future query with probability
+1 - 2^-fp_bits.
+
+Layout: the selector plane is a **packed companion uint32 plane** beside the
+table — ``uint32[buffer_buckets, 1]``, slot s of a bucket occupying bits
+[2s, 2s+2).  That is 2 bits of state per slot (0.5 byte/bucket at
+bucket_size 4) and supports bucket_size up to 16.  Kernels unpack to a
+transient ``uint32[buckets, bucket_size]`` view at entry and repack at exit
+(``sel_pack(sel_unpack(x)) == x``, so the pallas / interpret / XLA-emulation
+paths stay bit-for-bit).
+
+The repair step itself needs the resident key (you cannot rehash a
+fingerprint), so the adaptive table carries **mirror key planes**
+``khi/klo: uint32[buffer_buckets, bucket_size]`` — the "remote
+representation" of the adaptive-cuckoo-filter literature, kept beside the
+fingerprints so eviction chains can re-derive selector-0 geometry when they
+move a victim (movement resets the victim's selector; rollback restores the
+original plane contents verbatim).
+
+Everything here is pure jnp on purpose: the same functions run inside the
+Pallas kernels, on the jnp dispatch arm, and as the test reference — one
+definition, zero parity surface (the ``kernels/stash.py`` discipline).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashing
+
+SEL_MASK = 3          # 2 selector bits per slot
+MAX_BUCKET_SIZE = 16  # 16 slots * 2 bits fill the packed uint32
+
+
+def make_sel_plane(buffer_buckets: int) -> jax.Array:
+    """Fresh all-zero packed selector plane: uint32[buffer_buckets, 1]."""
+    return jnp.zeros((buffer_buckets, 1), dtype=jnp.uint32)
+
+
+def make_key_planes(buffer_buckets: int, bucket_size: int
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Fresh mirror key planes (hi, lo): uint32[buffer_buckets, bucket_size]."""
+    assert bucket_size <= MAX_BUCKET_SIZE, "packed selector plane holds <= 16"
+    shape = (buffer_buckets, bucket_size)
+    return jnp.zeros(shape, jnp.uint32), jnp.zeros(shape, jnp.uint32)
+
+
+def sel_unpack(packed: jax.Array, bucket_size: int) -> jax.Array:
+    """uint32[..., 1] packed rows -> uint32[..., bucket_size] selectors.
+
+    2-D broadcasted iota (not 1-D arange) so the same spelling lowers on
+    TPU Mosaic, in interpret mode, and under the XLA grid emulation.
+    """
+    shifts = jax.lax.broadcasted_iota(
+        jnp.uint32, (1, bucket_size), 1) * jnp.uint32(2)
+    return (packed >> shifts) & jnp.uint32(SEL_MASK)
+
+
+def sel_pack(sel_tbl: jax.Array) -> jax.Array:
+    """uint32[..., bucket_size] selectors -> packed uint32[..., 1] rows.
+
+    Disjoint bit ranges, so a sum is an OR; exact inverse of sel_unpack.
+    """
+    bucket_size = sel_tbl.shape[-1]
+    shifts = jax.lax.broadcasted_iota(
+        jnp.uint32, (1, bucket_size), 1) * jnp.uint32(2)
+    return jnp.sum((sel_tbl & jnp.uint32(SEL_MASK)) << shifts,
+                   axis=-1, keepdims=True, dtype=jnp.uint32)
+
+
+def fp_family(hi: jax.Array, lo: jax.Array, fp_bits: int
+              ) -> tuple[jax.Array, ...]:
+    """All four family fingerprints of a key batch: 4 x uint32[N].
+
+    fam[0] is the static fingerprint (selector-0 == ``hashing.fingerprint``),
+    which also fixes the bucket geometry and the stash identity.
+    """
+    return tuple(hashing.fingerprint_sel(hi, lo, s, fp_bits)
+                 for s in range(hashing.SEL_VARIANTS))
+
+
+def select_fp(fam, sels: jax.Array) -> jax.Array:
+    """Per-slot expected fingerprint under slot selectors.
+
+    fam: 4 x uint32[N] (``fp_family``); sels: uint32[N, bucket_size] ->
+    uint32[N, bucket_size].  A VPU select-chain, not a gather, so callers
+    hash each key once per family member amortized over both candidate
+    buckets — kernel-safe on every backend.
+    """
+    exp = jnp.where(sels == 1, fam[1][:, None], fam[0][:, None])
+    exp = jnp.where(sels == 2, fam[2][:, None], exp)
+    exp = jnp.where(sels == 3, fam[3][:, None], exp)
+    return exp
+
+
+def _adapt_one_bucket(table, sel_tbl, khi, klo, bucket, hi, lo, enable, *,
+                      fp_bits: int):
+    """Repair every colliding slot of one bucket for one reported query.
+
+    Returns the updated planes and whether any slot (a) adapted or (b) held
+    the query key itself (a true positive — never adapted).
+    """
+    b = bucket.astype(jnp.int32)
+    row, sels = table[b], sel_tbl[b]
+    rhi, rlo = khi[b], klo[b]
+    exp = hashing.fingerprint_sel(hi, lo, sels, fp_bits)
+    same = (rhi == hi) & (rlo == lo) & (row != 0)
+    collide = (row != 0) & (row == exp) & ~same & enable
+    nsel = (sels + jnp.uint32(1)) & jnp.uint32(SEL_MASK)
+    nfp = hashing.fingerprint_sel(rhi, rlo, nsel, fp_bits)
+    table = table.at[b].set(jnp.where(collide, nfp, row))
+    sel_tbl = sel_tbl.at[b].set(jnp.where(collide, nsel, sels))
+    return table, sel_tbl, jnp.any(collide), jnp.any(same & enable)
+
+
+def report_adapt(table: jax.Array, sels: jax.Array, khi: jax.Array,
+                 klo: jax.Array, hi: jax.Array, lo: jax.Array,
+                 valid: jax.Array, *, fp_bits: int, n_buckets
+                 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Apply a batch of confirmed-false-positive reports sequentially.
+
+    -> (table, packed sels, adapted bool[N], resident bool[N]).  A lane
+    adapts every slot in its candidate pair whose stored fingerprint matches
+    the query under that slot's selector and whose mirror key differs;
+    ``resident[i]`` flags reports whose key actually occupies a slot (a true
+    positive — callers should not have reported it, and it is never
+    "repaired" into a false negative).  Reports are rare control-plane
+    events, so a lax.scan (exact sequential semantics, matching the python
+    oracle loop) costs nothing on the hot path.
+    """
+    def step(carry, lane):
+        table, sel_tbl = carry
+        hi_l, lo_l, ok = lane
+        fp0 = hashing.fingerprint(hi_l, lo_l, fp_bits)
+        i1 = hashing.index_hash_dyn(hi_l, lo_l, n_buckets)
+        i2 = hashing.alt_index_dyn(i1, fp0, n_buckets)
+        table, sel_tbl, a1, r1 = _adapt_one_bucket(
+            table, sel_tbl, khi, klo, i1, hi_l, lo_l, ok, fp_bits=fp_bits)
+        # i2 == i1 happens (the involution has fixed points); guard the
+        # second pass so a fixed-point lane cannot double-bump a selector.
+        table, sel_tbl, a2, r2 = _adapt_one_bucket(
+            table, sel_tbl, khi, klo, i2, hi_l, lo_l, ok & (i2 != i1),
+            fp_bits=fp_bits)
+        return (table, sel_tbl), (a1 | a2, r1 | r2)
+
+    bucket_size = table.shape[-1]
+    sel_tbl = sel_unpack(sels, bucket_size)
+    (table, sel_tbl), (adapted, resident) = jax.lax.scan(
+        step, (table, sel_tbl), (hi, lo, valid))
+    return table, sel_pack(sel_tbl), adapted, resident

@@ -190,3 +190,153 @@ class ContinuousBatcher:
             self.step()
             ticks += 1
         return self.stats
+
+
+# ------------------------------------------------ deferred write pump ----
+#
+# The routed distributed writes (``core.distributed.distributed_insert``)
+# return a **deferred batch**: lanes that exceeded their owner shard's
+# all_to_all capacity and were never attempted.  PR 6 left resubmission to
+# the caller; the pump below closes the loop with the SAME hysteresis
+# controller the request path uses — deferred keys are a write-side
+# admission queue, and resubmitting them while the shards are congested
+# just re-defers them (or worse, lands them in saturated stashes).
+
+
+class ShardedFilterFills:
+    """``GenerationalFilter.fills()``-shaped duck over a ShardedFilterState.
+
+    ``AdmissionController`` reads congestion as (generation fill, stash
+    fill); for a sharded state the analogous device scalars are aggregate
+    table occupancy and aggregate stash occupancy.  Takes a zero-arg getter
+    (not a state) because the pump replaces its state every write — the
+    controller must always read the CURRENT one.
+    """
+
+    def __init__(self, get_state: Callable):
+        self._get = get_state
+
+    def fills(self) -> tuple[float, float]:
+        state = self._get()
+        fill = float(jnp.mean(state.tables != 0))
+        stash_fill = (float(jnp.mean(state.stashes[:, 0, :] != 0))
+                      if state.stashes is not None else 0.0)
+        return fill, stash_fill
+
+
+@dataclasses.dataclass
+class PumpStats:
+    submitted: int = 0      # lanes offered via submit()
+    inserted: int = 0       # lanes resident after their (re)attempt
+    deferred: int = 0       # lane-deferrals observed (a lane can repeat)
+    resubmitted: int = 0    # lanes re-offered by pump()
+    held_ticks: int = 0     # pump ticks the hysteresis gate held the queue
+    failed: int = 0         # genuine insert failures (chain + stash full)
+
+
+class DeferredWritePump:
+    """Hysteresis-controlled resubmission of routed-write deferred batches.
+
+    Wraps ``distributed_insert`` on a fixed (mesh, axis, sharded state):
+    ``submit`` runs the routed insert and parks the returned deferred batch
+    host-side; ``pump`` re-offers parked keys only while the admission
+    controller's congestion signal allows (trip at ``high_water``, resume
+    at ``low_water`` — the identical hysteresis the request scheduler
+    applies to decode admission, pointed at the write path).  Parked
+    batches are padded to the sharded batch shape with ``valid=False``
+    lanes, so resubmission never fabricates sentinel inserts.
+    """
+
+    def __init__(self, mesh, axis: str, state, *, fp_bits: int,
+                 admission=None, capacity_factor: float = 2.0,
+                 backend: str = "auto", donate: bool = True):
+        from repro.core.distributed import distributed_insert
+        from repro.streaming.admission import AdmissionController
+        self.mesh, self.axis = mesh, axis
+        self.state = state
+        self.fp_bits = fp_bits
+        self.capacity_factor = capacity_factor
+        self.backend = backend
+        self.donate = donate
+        self._insert = distributed_insert
+        self.admission = admission or AdmissionController(
+            filt=ShardedFilterFills(lambda: self.state))
+        self.n_shards = mesh.shape[axis]
+        self._pend_hi = np.empty((0,), np.uint32)
+        self._pend_lo = np.empty((0,), np.uint32)
+        self.stats = PumpStats()
+
+    @property
+    def pending(self) -> int:
+        return int(self._pend_hi.size)
+
+    def _attempt(self, hi: np.ndarray, lo: np.ndarray):
+        """One routed insert over a host batch, padded to the shard shape."""
+        pad = (-hi.size) % self.n_shards
+        valid = np.ones(hi.size + pad, bool)
+        if pad:
+            hi = np.concatenate([hi, np.zeros(pad, np.uint32)])
+            lo = np.concatenate([lo, np.zeros(pad, np.uint32)])
+            valid[-pad:] = False
+        self.state, ok, deferred, _ov = self._insert(
+            self.mesh, self.axis, self.state, jnp.asarray(hi),
+            jnp.asarray(lo), fp_bits=self.fp_bits,
+            capacity_factor=self.capacity_factor, backend=self.backend,
+            donate=self.donate, valid=jnp.asarray(valid))
+        ok, deferred = np.asarray(ok), np.asarray(deferred)
+        self._pend_hi = np.concatenate([self._pend_hi, hi[deferred]])
+        self._pend_lo = np.concatenate([self._pend_lo, lo[deferred]])
+        self.stats.inserted += int(ok.sum())
+        self.stats.deferred += int(deferred.sum())
+        self.stats.failed += int((valid & ~ok & ~deferred).sum())
+        return ok, deferred
+
+    def submit(self, hi, lo):
+        """Routed insert of a fresh batch -> (ok[N], deferred[N]).
+
+        Deferred lanes are parked for ``pump``; the batch must divide the
+        shard count (the ``distributed_insert`` contract for fresh traffic).
+        """
+        hi = np.asarray(hi, np.uint32)
+        lo = np.asarray(lo, np.uint32)
+        self.stats.submitted += int(hi.size)
+        return self._attempt(hi, lo)
+
+    def pump(self) -> int:
+        """One resubmission tick -> lanes re-attempted (0 while held).
+
+        Gated by the side-effect-free ``peek`` so polling does not inflate
+        the controller's per-request counters; a tripped gate holds the
+        parked batch untouched (``held_ticks``) until the congestion signal
+        recedes past low_water.
+        """
+        if not self.pending:
+            return 0
+        if not self.admission.peek():
+            self.stats.held_ticks += 1
+            return 0
+        hi, lo = self._pend_hi, self._pend_lo
+        self._pend_hi = np.empty((0,), np.uint32)
+        self._pend_lo = np.empty((0,), np.uint32)
+        self.stats.resubmitted += int(hi.size)
+        self._attempt(hi, lo)
+        return int(hi.size)
+
+    def run_until_drained(self, *, max_ticks: int = 100,
+                          on_held=None) -> PumpStats:
+        """Pump until nothing is parked (or ``max_ticks``).
+
+        ``on_held``: optional callback invoked on each held tick — the hook
+        where a control plane relieves congestion (rotate a generation,
+        grow the shards, age the stash); without one a tripped gate over a
+        static filter would hold forever, so the loop stops early when
+        holding makes no progress and nothing external intervenes.
+        """
+        for _ in range(max_ticks):
+            if not self.pending:
+                break
+            if self.pump() == 0 and on_held is None:
+                break
+            if on_held is not None and self.admission.tripped:
+                on_held(self)
+        return self.stats

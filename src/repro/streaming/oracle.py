@@ -24,6 +24,7 @@ import dataclasses
 
 import numpy as np
 
+from repro.core import hashing
 from repro.core.pyfilter import PyCuckooFilter
 
 
@@ -145,3 +146,180 @@ class PyStashFilter(PyCuckooFilter):
                 out[0, k] = entry[0]
                 out[1, k] = entry[1]
         return out
+
+
+@dataclasses.dataclass
+class PyAdaptiveFilter(PyStashFilter):
+    """Sequential oracle for the ADAPTIVE filter — four planes, selectors.
+
+    Extends the stash oracle with the adaptive state's companion planes
+    (``adaptive.state.AdaptiveState``): per-slot 2-bit selectors ``sel``
+    and mirror key planes ``khi``/``klo``.  The kernel-faithful contracts:
+
+      * bucket geometry is ALWAYS the selector-0 fingerprint's (i1 from the
+        key, i2 from fp0) — adaptation changes what a slot stores, never
+        where the entry lives;
+      * a slot stores ``fingerprint_sel(resident, sel[slot])`` and answers
+        lookups/deletes under ITS selector;
+      * placements and kicks write selector-0 entries with the key
+        mirrored (movement resets adaptation — the standard adaptive-
+        cuckoo trade); eviction chains chase the VICTIM's fp0 re-derived
+        from its mirror key; rollback restores original plane contents
+        verbatim (slot exclusivity via the dirty set makes that identical
+        to the carried newest-first unwind);
+      * the stash holds selector-0 fingerprints (no selector to bump —
+        stash collisions are the reputation tier's problem);
+      * ``report_false_positive`` bumps every colliding non-resident slot
+        in the candidate pair (i2 pass skipped on involution fixed points)
+        and rewrites it from the mirror key.
+    """
+
+    def __post_init__(self):
+        super().__post_init__()
+        shape = (self.n_buckets, self.bucket_size)
+        self.sel = np.zeros(shape, dtype=np.uint32)
+        self.khi = np.zeros(shape, dtype=np.uint32)
+        self.klo = np.zeros(shape, dtype=np.uint32)
+        self.adapted = 0
+
+    # -- helpers -------------------------------------------------------
+
+    def _pair(self, key: int) -> tuple[np.uint32, np.uint32]:
+        return hashing.key_to_u32_pair_np(np.uint64(key))
+
+    def _fp_sel(self, hi: np.uint32, lo: np.uint32, sel) -> np.ndarray:
+        return hashing.fingerprint_sel_np(hi, lo, np.uint32(sel),
+                                          self.fp_bits)
+
+    def _write(self, b: int, s: int, fp, sel, hi, lo) -> None:
+        self.table[b, s] = fp
+        self.sel[b, s] = sel
+        self.khi[b, s] = hi
+        self.klo[b, s] = lo
+
+    # -- core ops ------------------------------------------------------
+
+    def lookup(self, key: int) -> bool:
+        hi, lo = self._pair(key)
+        fp, i1 = self._fp_i1(key)
+        i2 = self._alt(i1, fp)
+        for b in (i1, i2):
+            exp = self._fp_sel(hi, lo, self.sel[b])
+            if np.any((self.table[b] != 0) & (self.table[b] == exp)):
+                return True
+        return any(sf == fp and sb in (i1, i2) for sf, sb in self.stash)
+
+    def insert(self, key: int) -> bool:
+        """Insert carrying the KEY through the chain (kernel schedule).
+
+        Identical round discipline to ``PyStashFilter.insert``; the carried
+        quantity is the key pair so every write mirrors it, kicks re-derive
+        the victim's selector-0 geometry from ITS mirror key, and rollback
+        restores each kicked slot's original four-plane contents.
+        """
+        hi, lo = self._pair(key)
+        fp, i1 = self._fp_i1(key)
+        i2 = self._alt(i1, fp)
+        for i in (i1, i2):
+            slot = np.where(self.table[i] == 0)[0]
+            if slot.size:
+                self._write(i, slot[0], fp, 0, hi, lo)
+                self.count += 1
+                return True
+        bucket, chi, clo, steps = i2, hi, lo, 0
+        dirty: set[tuple[int, int]] = set()
+        hist: list[tuple[int, int, tuple]] = []
+        for _round in range(self.evict_rounds):
+            cfp = int(hashing.fingerprint_np(chi, clo, self.fp_bits))
+            empty = np.where(self.table[bucket] == 0)[0]
+            if empty.size:                        # phase A: place carried
+                self._write(bucket, empty[0], cfp, 0, chi, clo)
+                self.count += 1
+                return True
+            slot = None
+            for j in range(self.bucket_size):     # first non-dirty slot,
+                cand = (steps + j) % self.bucket_size   # rotating
+                if (bucket, cand) not in dirty:
+                    slot = cand
+                    break
+            if slot is None:                      # fully-dirty bucket:
+                continue                          # burn the round, no kick
+            orig = (self.table[bucket, slot], self.sel[bucket, slot],
+                    self.khi[bucket, slot], self.klo[bucket, slot])
+            hist.append((bucket, slot, orig))
+            self._write(bucket, slot, cfp, 0, chi, clo)
+            dirty.add((bucket, slot))
+            chi, clo = orig[2], orig[3]           # victim's mirror key
+            vfp0 = int(hashing.fingerprint_np(chi, clo, self.fp_bits))
+            bucket = self._alt(bucket, vfp0)      # chase fp0 geometry
+            steps += 1
+        cfp = int(hashing.fingerprint_np(chi, clo, self.fp_bits))
+        for k, entry in enumerate(self._slots):   # spill carried fp0
+            if entry is None:
+                self._slots[k] = (cfp, int(bucket))
+                self.spills += 1
+                return True
+        for (bi, bj, orig) in reversed(hist):     # stash full: restore
+            self._write(bi, bj, *orig)            # originals verbatim
+        return False
+
+    def delete(self, key: int) -> bool:
+        """Verified delete under slot selectors; table first, then stash."""
+        hi, lo = self._pair(key)
+        fp, i1 = self._fp_i1(key)
+        i2 = self._alt(i1, fp)
+        for b in (i1, i2):
+            exp = self._fp_sel(hi, lo, self.sel[b])
+            slot = np.where((self.table[b] != 0) & (self.table[b] == exp))[0]
+            if slot.size:
+                self._write(b, slot[0], 0, 0, 0, 0)
+                self.count -= 1
+                return True
+        for k, entry in enumerate(self._slots):
+            if entry is not None and entry[0] == fp and entry[1] in (i1, i2):
+                self._slots[k] = None
+                return True
+        return False
+
+    def report_false_positive(self, key: int) -> tuple[bool, bool]:
+        """One confirmed-FP repair -> (adapted, resident).
+
+        Bumps every colliding slot in the candidate pair whose mirror key
+        differs from the reported key; a slot actually holding the key is
+        flagged resident and never repaired.
+        """
+        hi, lo = self._pair(key)
+        fp, i1 = self._fp_i1(key)
+        i2 = self._alt(i1, fp)
+        adapted = resident = False
+        buckets = (i1,) if i2 == i1 else (i1, i2)
+        for b in buckets:
+            for s in range(self.bucket_size):
+                row = self.table[b, s]
+                if row == 0:
+                    continue
+                same = self.khi[b, s] == hi and self.klo[b, s] == lo
+                exp = self._fp_sel(hi, lo, self.sel[b, s])
+                if same:
+                    resident = True
+                elif row == exp:
+                    nsel = (int(self.sel[b, s]) + 1) & 3
+                    nfp = self._fp_sel(self.khi[b, s], self.klo[b, s], nsel)
+                    self._write(b, s, nfp, nsel,
+                                self.khi[b, s], self.klo[b, s])
+                    adapted = True
+        self.adapted += bool(adapted)
+        return adapted, resident
+
+    # -- plane exports (tests) -----------------------------------------
+
+    def sel_plane_array(self) -> np.ndarray:
+        """The selector plane as the kernels' packed uint32[n, 1] layout."""
+        shifts = (np.arange(self.bucket_size, dtype=np.uint32)
+                  * np.uint32(2))
+        packed = np.sum((self.sel & np.uint32(3)) << shifts, axis=-1,
+                        dtype=np.uint64).astype(np.uint32)
+        return packed[:, None]
+
+    def key_planes(self) -> tuple[np.ndarray, np.ndarray]:
+        return self.khi.copy(), self.klo.copy()

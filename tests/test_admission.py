@@ -1,0 +1,104 @@
+"""Admission hysteresis boundary contracts (PR 7 satellite).
+
+``test_streaming.py`` exercises the controller end-to-end against a real
+``GenerationalFilter``; these tests pin the *exact* boundary semantics with
+a stub whose ``fills()`` is programmable, because the reputation tier and
+the deferred-write pump both key off the precise trip/reset points:
+
+  * trip happens exactly AT ``high_water`` (``>=``, not ``>``);
+  * re-admission happens exactly AT ``low_water`` (``<=``, not ``<``);
+  * inside the hysteresis band the previous state holds in both directions;
+  * ``observe_eof`` inflates marked ops by exactly
+    ``max(1, round(ops * (1 + signal)))``.
+"""
+import dataclasses
+
+import pytest
+
+from repro.core.policy import EofPolicy
+from repro.streaming import AdmissionConfig, AdmissionController
+
+pytestmark = pytest.mark.tier1
+
+
+@dataclasses.dataclass
+class _StubFilter:
+    """Duck-typed stand-in: anything with ``fills() -> (fill, stash_fill)``.
+
+    Drives the whole congestion signal through ``fill`` (fill_weight=1) so
+    each test names the signal value directly.
+    """
+
+    fill: float = 0.0
+
+    def fills(self):
+        return self.fill, 0.0
+
+
+_CFG = AdmissionConfig(stash_weight=0.0, fill_weight=1.0,
+                       high_water=0.85, low_water=0.60)
+
+
+def _controller(fill=0.0):
+    return AdmissionController(_StubFilter(fill), _CFG)
+
+
+def test_trips_exactly_at_high_water():
+    ctl = _controller()
+    eps = 1e-9
+    ctl.filt.fill = _CFG.high_water - eps
+    assert ctl.peek(), "just under high_water must still admit"
+    assert not ctl.tripped
+    ctl.filt.fill = _CFG.high_water
+    assert not ctl.peek(), "signal == high_water must trip (>= boundary)"
+    assert ctl.tripped
+
+
+def test_readmits_exactly_at_low_water():
+    ctl = _controller(fill=1.0)
+    assert not ctl.peek()                   # trip first
+    eps = 1e-9
+    ctl.filt.fill = _CFG.low_water + eps
+    assert not ctl.peek(), "just above low_water must stay tripped"
+    ctl.filt.fill = _CFG.low_water
+    assert ctl.peek(), "signal == low_water must re-admit (<= boundary)"
+    assert not ctl.tripped
+
+
+def test_hysteresis_band_holds_previous_state():
+    mid = (_CFG.low_water + _CFG.high_water) / 2.0
+    # Approaching from below: band value admits (never tripped).
+    ctl = _controller(fill=mid)
+    assert ctl.peek()
+    # Approaching from above: same band value stays tripped.
+    ctl = _controller(fill=1.0)
+    assert not ctl.peek()
+    ctl.filt.fill = mid
+    assert not ctl.peek(), "band is sticky: tripped state holds"
+
+
+def test_peek_leaves_counters_untouched_admit_counts():
+    ctl = _controller(fill=0.0)
+    for _ in range(3):
+        ctl.peek()
+    assert (ctl.admitted, ctl.deferred) == (0, 0)
+    assert ctl.admit() and ctl.admitted == 1
+    ctl.filt.fill = 1.0
+    assert not ctl.admit()
+    assert ctl.deferred == 1
+
+
+def test_observe_eof_inflates_marked_ops_exactly():
+    # Window armed outside the markers, occupancy outside [o_min, o_max]
+    # band never reached, so every observe just accumulates t_cur.
+    for signal, ops, want in ((0.0, 7, 7), (0.5, 7, 10), (1.0, 7, 14),
+                              (0.8, 1, 2), (0.0, 1, 1)):
+        ctl = _controller(fill=signal)
+        pol = EofPolicy(c_min=64)
+        pol.observe(items=90, capacity=100, ops=1)   # arm the window
+        before = pol.t_cur
+        ctl.observe_eof(pol, items=90, capacity=100, ops=ops)
+        inflated = pol.t_cur - before
+        assert inflated == want, (
+            f"signal={signal} ops={ops}: got {inflated}, want "
+            f"max(1, round(ops * (1 + signal))) = {want}")

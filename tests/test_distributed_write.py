@@ -324,3 +324,97 @@ def test_sharded_state_compat(rng):
     swapped = dist.local_shard_insert_host(full, 0,
                                            jnp.zeros((64, 4), jnp.uint32))
     assert swapped.stashes is not None and swapped.n_buckets == 32
+
+
+PUMP_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    import json
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro.core import distributed as dist, hashing
+    from repro.serving.scheduler import DeferredWritePump
+
+    mesh = jax.make_mesh((2,), ("data",))
+    NB, BS, FP = 256, 4, 16
+    rng = np.random.RandomState(7)
+    keys = np.unique(rng.randint(1, 2**63, size=1024, dtype=np.int64)
+                     ).astype(np.uint64)
+    hi, lo = hashing.key_to_u32_pair_np(keys)
+
+    # --- valid-mask semantics: poisoned invalid lanes must be inert ----
+    state = dist.make_sharded_state(2, NB, BS, stash_slots=64)
+    n = 64
+    vhi = jnp.concatenate([jnp.asarray(hi[:n]), jnp.zeros((n,), jnp.uint32)])
+    vlo = jnp.concatenate([jnp.asarray(lo[:n]), jnp.zeros((n,), jnp.uint32)])
+    valid = jnp.concatenate([jnp.ones((n,), bool), jnp.zeros((n,), bool)])
+    state, ok, dfr, _ = dist.distributed_insert(
+        mesh, "data", state, vhi, vlo, fp_bits=FP, valid=valid)
+    ok, dfr = np.asarray(ok), np.asarray(dfr)
+    zhit, _ = dist.distributed_lookup(
+        mesh, "data", state, jnp.zeros((2,), jnp.uint32),
+        jnp.zeros((2,), jnp.uint32), fp_bits=FP)
+    mask_ok = bool(ok[:n].all() and not ok[n:].any() and not dfr.any())
+    live = int(np.asarray(state.tables != 0).sum())
+
+    # --- pump: skewed burst under tight capacity defers, then drains ---
+    owner = np.asarray(hashing.owner_shard_np(hi, lo, 2))
+    hot = keys[owner == 0]
+    skew = np.concatenate([hot, hot, keys[owner == 1]])[:512]
+    shi, slo = hashing.key_to_u32_pair_np(skew)
+    pump = DeferredWritePump(mesh, "data",
+                             dist.make_sharded_state(2, NB, BS,
+                                                     stash_slots=64),
+                             fp_bits=FP, capacity_factor=0.25)
+    sok, sdfr = pump.submit(shi, slo)
+    first_deferred = int(sdfr.sum())
+
+    # hold the gate shut for 3 ticks, then open: held_ticks must count
+    class Gate:
+        def __init__(self, closed): self.closed, self.tripped = closed, True
+        def peek(self):
+            self.closed -= 1
+            self.tripped = self.closed >= 0
+            return not self.tripped
+    pump.admission = Gate(3)
+    pump.run_until_drained(max_ticks=64,
+                           on_held=lambda p: None)   # keep ticking
+    phits, _ = dist.distributed_lookup(
+        mesh, "data", pump.state, jnp.asarray(shi), jnp.asarray(slo),
+        fp_bits=FP)
+    pzero, _ = dist.distributed_lookup(
+        mesh, "data", pump.state, jnp.zeros((2,), jnp.uint32),
+        jnp.zeros((2,), jnp.uint32), fp_bits=FP)
+
+    print(json.dumps({
+        "mask_ok": mask_ok,
+        "zero_hit": bool(np.asarray(zhit).any()),
+        "live": live, "n": n,
+        "first_deferred": first_deferred,
+        "held_ticks": pump.stats.held_ticks,
+        "pending": pump.pending,
+        "inserted": pump.stats.inserted,
+        "submitted": pump.stats.submitted,
+        "all_present": bool(np.asarray(phits).all()),
+        "pad_hit": bool(np.asarray(pzero).any()),
+    }))
+""")
+
+
+def test_deferred_write_pump_subprocess():
+    """PR-7 satellite: the hysteresis-gated pump re-lands every deferred
+    lane, valid-mask padding stays inert, and a closed admission gate is
+    counted as held ticks instead of hammering the mesh."""
+    res = _run(PUMP_SCRIPT)
+    # lane-mask contract: invalid lanes are never acked, deferred, or
+    # written — the all-zero poison key must not become resident
+    assert res["mask_ok"], "valid mask acks exactly the valid lanes"
+    assert not res["zero_hit"], "invalid poison lanes must never land"
+    assert res["live"] == res["n"], "one live entry per valid lane"
+    # pump contract
+    assert res["first_deferred"] > 0, "tight capacity must defer"
+    assert res["held_ticks"] == 3, "closed gate ticks are counted, not spun"
+    assert res["pending"] == 0, "pump drains once the gate opens"
+    assert res["inserted"] == res["submitted"]
+    assert res["all_present"], "every deferred key eventually lands"
+    assert not res["pad_hit"], "resubmission padding lanes must stay inert"
