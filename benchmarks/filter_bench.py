@@ -402,6 +402,24 @@ def distributed_rows():
     return rows, results
 
 
+def slo_rows(*, seed=0):
+    """Latency-SLO scenario x percentile matrix (ISSUE 8).
+
+    Replays the deterministic workload scenarios closed-loop through the
+    serving submit path (``repro.serving.slo``) and records op-weighted
+    p50/p99/p99.9 + keys/s per scenario, the sync-path burst arm the
+    double-buffer comparison gates on, and the admission arm's shed/defer
+    counters.  ``scripts/bench_gate.py`` fails verify when a committed
+    ``slo_*_p99_us`` row regresses or the async burst tail falls behind
+    the sync one in the same run.
+    """
+    from repro.serving.slo import bench_scenarios
+    results = bench_scenarios(seed=seed)
+    rows = [(k, 0.0, v) for k, v in sorted(results.items())
+            if k.endswith("_us") or k.endswith("_keys_per_s")]
+    return rows, results
+
+
 def run(json_path: str | None = JSON_PATH):
     rng = np.random.RandomState(0)
     rows, results = [], {"backend_default": jax.default_backend()}
@@ -410,7 +428,7 @@ def run(json_path: str | None = JSON_PATH):
         r, res = fn(rng)
         rows += r
         results.update(res)
-    for fn in (autotune_rows, distributed_rows):
+    for fn in (autotune_rows, distributed_rows, slo_rows):
         r, res = fn()
         rows += r
         results.update(res)

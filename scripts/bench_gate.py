@@ -9,6 +9,16 @@ against the trajectory the repo actually promises.  A PR that slows a hot
 path >20% must either fix the regression or consciously commit the slower
 numbers (changing the baseline in the same commit clears the gate).
 
+Since ISSUE 8 the gate also covers **tail latency**: every committed
+``slo_*_p99_us`` row may rise at most ``BENCH_GATE_SLO_THRESHOLD``
+(fraction, default 0.25) over its baseline, the scenario matrix must be
+present (p50/p99/p999 for the core scenarios), and the double-buffered
+burst tail must not fall behind the synchronous arm measured in the same
+run.  Latency percentiles are single-pass samples (no min-of-trials — a
+percentile of minima isn't a percentile), so they are noisier than the
+keys/s rows; CI sets the SLO threshold generously and the local default
+stays tight.
+
 Exit codes: 0 pass / 1 regression / 0 with a notice when there is no
 committed baseline (first run) or no git.  ``BENCH_GATE_THRESHOLD``
 overrides the drop threshold (fraction, default 0.20) — the CPU container
@@ -24,6 +34,11 @@ import sys
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 THRESHOLD = float(os.environ.get("BENCH_GATE_THRESHOLD", "0.20"))
+SLO_THRESHOLD = float(os.environ.get("BENCH_GATE_SLO_THRESHOLD", "0.25"))
+
+# Scenarios whose percentile rows must exist in every fresh bench run
+# (ISSUE 8 acceptance: the matrix can't silently shrink).
+SLO_REQUIRED = ("uniform", "zipfian", "burst_train", "delete_heavy")
 
 
 def main() -> int:
@@ -83,6 +98,43 @@ def main() -> int:
         if stat is not None and adap is not None and adap * 10.0 > stat:
             bad.append(f"  fp_rate adversarial: adaptive {adap:.2e} not "
                        f">=10x below static {stat:.2e} after feedback")
+    # ISSUE-8 acceptance: tail-latency gates.
+    #   * regression: committed slo_*_p99_us rows may rise at most
+    #     SLO_THRESHOLD (latency regresses UP — the mirror of keys/s);
+    #   * presence + sanity: the core scenarios' percentile rows must
+    #     exist and be ordered p50 <= p99 <= p999;
+    #   * double-buffer win: the async burst tail must not fall behind
+    #     the sync arm measured in the SAME run (same machine weather).
+    for key, base in sorted(committed.items()):
+        if not key.endswith("_p99_us") or not isinstance(base, (int, float)):
+            continue
+        if "_async_" in key:
+            # observability-only arm: on single-core hosts the pipelined
+            # path pays pure queueing, so its absolute value is volatile;
+            # the default-vs-sync same-run check below is the contract.
+            continue
+        cur = fresh.get(key)
+        if cur is None:
+            bad.append(f"  {key}: row disappeared (baseline {base})")
+        elif base > 0 and cur > base * (1.0 + SLO_THRESHOLD):
+            bad.append(f"  {key}: {cur} us vs baseline {base} us "
+                       f"({cur / base - 1.0:+.0%}, limit "
+                       f"+{SLO_THRESHOLD:.0%})")
+    for scen in SLO_REQUIRED:
+        p = {q: fresh.get(f"slo_{scen}_{q}_us") for q in ("p50", "p99",
+                                                          "p999")}
+        if any(v is None for v in p.values()):
+            bad.append(f"  slo_{scen}: percentile rows missing from "
+                       f"fresh bench ({p})")
+        elif not (p["p50"] <= p["p99"] <= p["p999"]):
+            bad.append(f"  slo_{scen}: percentiles not monotone ({p})")
+    dflt_p99 = fresh.get("slo_burst_train_p99_us")
+    sync_p99 = fresh.get("slo_burst_train_sync_p99_us")
+    if (dflt_p99 is not None and sync_p99 is not None and sync_p99 > 0
+            and dflt_p99 > sync_p99 * (1.0 + SLO_THRESHOLD)):
+        bad.append(f"  burst_train: default submit path p99 {dflt_p99} us "
+                   f"fell behind the sync arm {sync_p99} us (same-run, "
+                   f"limit +{SLO_THRESHOLD:.0%})")
     if bad:
         print(f"bench gate FAILED ({len(bad)} row(s) regressed "
               f">{THRESHOLD:.0%}):")
@@ -92,8 +144,9 @@ def main() -> int:
               "produced the baseline, set BENCH_GATE_THRESHOLD higher.")
         return 1
     n = sum(1 for k in committed if k.endswith("_keys_per_s"))
-    print(f"bench gate OK ({n} keys/s rows within -{THRESHOLD:.0%} "
-          "of baseline)")
+    n_slo = sum(1 for k in committed if k.endswith("_p99_us"))
+    print(f"bench gate OK ({n} keys/s rows within -{THRESHOLD:.0%}, "
+          f"{n_slo} p99 rows within +{SLO_THRESHOLD:.0%} of baseline)")
     return 0
 
 

@@ -1,3 +1,7 @@
 from repro.serving.engine import (generate, greedy_sample, make_decode_step,
                                   make_prefill_step)
 from repro.serving.kvcache import PrefixCacheIndex, block_hashes
+from repro.serving.scheduler import (ContinuousBatcher, DeferredWritePump,
+                                     FilterOpBatcher, OpWave, Request)
+from repro.serving.slo import LatencyRecorder, SloHarness, SloReport
+from repro.serving.workloads import OpBatch, SCENARIOS, scenario_stream

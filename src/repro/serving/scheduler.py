@@ -22,6 +22,8 @@ load *before* it turns into decode-slot starvation.
 from __future__ import annotations
 
 import dataclasses
+import os
+import time
 from collections import deque
 from typing import Callable, Optional
 
@@ -29,6 +31,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import filter as jfilter
+from repro.core import hashing
+from repro.core.scheduling import dedupe_keys
+from repro.kernels import ops as kops
 from repro.serving.engine import greedy_sample, make_decode_step, \
     make_prefill_step
 from repro.serving.kvcache import PrefixCacheIndex
@@ -163,7 +169,15 @@ class ContinuousBatcher:
         for slot in range(self.slots):
             if slot not in self.active and self.queue:
                 self._admit_one(slot, self.queue.popleft())
+        # Dispatch phase: every occupied slot's decode + sample is *queued*
+        # on the device with no host sync (jax async dispatch); the per-tick
+        # harvest below materializes all sampled tokens in ONE stacked
+        # transfer instead of one ``int(tok[0, 0])`` sync per slot — the
+        # same dispatch/harvest split the membership submit path
+        # (``FilterOpBatcher``) runs at wave granularity.
         live = 0
+        ticked: list[tuple[int, Request]] = []
+        toks = []
         for slot, req in list(self.active.items()):
             logits, cache = self._decode(self.params, self.caches[slot],
                                          self._last_tok[slot],
@@ -172,13 +186,18 @@ class ContinuousBatcher:
             self.pos[slot] += 1
             tok = self._sample(logits)
             self._last_tok[slot] = tok
-            req.out.append(int(tok[0, 0]))
+            ticked.append((slot, req))
+            toks.append(tok)
             live += 1
-            if len(req.out) >= req.max_new:
-                self.index.admit(req.prompt)     # publish prefix blocks
-                del self.active[slot]
-                self.caches[slot] = None
-                self.stats.finished += 1
+        if ticked:
+            vals = np.asarray(jnp.concatenate([t[:, 0] for t in toks]))
+            for (slot, req), val in zip(ticked, vals):
+                req.out.append(int(val))
+                if len(req.out) >= req.max_new:
+                    self.index.admit(req.prompt)  # publish prefix blocks
+                    del self.active[slot]
+                    self.caches[slot] = None
+                    self.stats.finished += 1
         self.stats.decode_steps += 1
         self.stats.wasted_slot_steps += self.slots - live
         return live
@@ -340,3 +359,285 @@ class DeferredWritePump:
             if on_held is not None and self.admission.tripped:
                 on_held(self)
         return self.stats
+
+
+# --------------------------------------- membership-op submit path ------
+#
+# The latency side of the serving story.  ``ContinuousBatcher`` schedules
+# decode slots; the filter traffic it fronts (prefix-index probes, the SLO
+# harness's scenario replay) arrives as *waves* of homogeneous membership
+# ops.  The batcher below is the wave-granular submit path: one wave is
+# prepared host-side (pad to a fixed shape, hash split, optional lookup
+# dedup), dispatched to the device through ``FilterOps``, and harvested —
+# ``jax.block_until_ready`` ONLY at harvest.  In double-buffered mode the
+# harvest of wave k happens *after* wave k+1 has been prepared and
+# dispatched, so host prep overlaps device execution and the scheduler,
+# not host sync, sets the latency floor.  Both modes issue the identical
+# device-call sequence in the identical order, so their results (and the
+# filter state they leave behind) are bit-for-bit equal — the oracle
+# parity tests in tests/test_slo.py pin this.
+
+
+@dataclasses.dataclass
+class OpWave:
+    """One submitted wave and its timing: the recorder's unit of sample.
+
+    ``latency_us`` spans offered -> results-materialized, so a wave parked
+    by admission control carries its queueing delay (closed-loop latency,
+    not bare kernel time)."""
+    kind: str
+    n: int
+    submit_s: float
+    done_s: float = 0.0
+    deferred_ticks: int = 0       # submit ticks spent parked by admission
+    results: Optional[np.ndarray] = None
+    # harvest internals: device refs + result slicing metadata
+    _device: tuple = dataclasses.field(default=(), repr=False)
+    _n_probe: int = 0
+    _inverse: Optional[np.ndarray] = dataclasses.field(
+        default=None, repr=False)
+
+    @property
+    def latency_us(self) -> float:
+        return (self.done_s - self.submit_s) * 1e6
+
+
+@dataclasses.dataclass
+class BatcherStats:
+    waves: int = 0                # waves offered via submit()
+    ops: int = 0                  # real (non-padding) lanes offered
+    harvests: int = 0
+    deferred_waves: int = 0       # insert waves parked by admission
+    held_ticks: int = 0           # drain attempts the gate held the queue
+    shed_ops: int = 0             # lanes still parked when drain gave up
+    deduped_lanes: int = 0        # lookup lanes collapsed by dedup
+
+
+class FilterOpBatcher:
+    """Double-buffered wave submit path over a ``FilterOps`` data plane.
+
+    Works over either state family:
+
+      * ``core.filter.FilterState`` (+ optional overflow stash) — lookup /
+        insert / delete through the static-filter entry points;
+      * ``adaptive.state.AdaptiveState`` (detected by its ``sels`` plane)
+        — the selector-aware entry points, plus the ``report`` kind
+        feeding confirmed false positives back.
+
+    Waves are padded to ``wave_slots`` (key 0, ``valid=False``) so every
+    (kind, state-family) pair compiles exactly once.  ``submit`` returns
+    the ``OpWave`` immediately; ``wave.results`` is populated at harvest —
+    the next submit (double-buffered) or before submit returns (sync).
+    Call ``flush()`` to force the in-flight wave out (the closed-loop
+    feedback point: adversarial report waves need the previous lookup's
+    results).
+
+    Admission coupling: with an ``AdmissionController`` attached (or an
+    ``AdmissionConfig``, from which one is built over this batcher's own
+    ``fills()`` duck), insert waves are gated by the hysteresis signal —
+    tripped inserts park in a deferred queue that retries on later submits
+    / ``drain()``.  Deletes and lookups bypass the gate (deletes *relieve*
+    congestion; probes don't add occupancy).  ``fills()`` reports the
+    occupancy snapshot taken at the last harvest — polling it costs no
+    device sync, so the controller can gate every wave without stalling
+    the pipeline.
+
+    ``double_buffer="auto"`` (the default) resolves per host: overlap
+    only pays when device work and host prep run on different silicon, so
+    it picks the async path on real accelerators and on multi-core CPU
+    hosts (XLA's compute pool and the numpy prep genuinely interleave),
+    and the sync path on a single-core CPU host — there the "device" IS
+    the host core, every pipelined wave just queues behind the previous
+    one, and per-wave latency doubles for zero wall-clock gain.  Both
+    paths issue the identical device-call sequence in the identical
+    order, so the choice is bit-for-bit invisible to results.
+    """
+
+    def __init__(self, ops, state, *, stash: Optional[jax.Array] = None,
+                 wave_slots: int = 512, double_buffer="auto",
+                 dedupe_lookups: bool = True, admission=None,
+                 clock: Callable[[], float] = time.perf_counter):
+        self.ops = ops
+        self.state = state
+        self.stash = stash
+        self.wave_slots = int(wave_slots)
+        if double_buffer == "auto":
+            double_buffer = (jax.default_backend() != "cpu"
+                             or (os.cpu_count() or 1) > 1)
+        self.double_buffer = bool(double_buffer)
+        self.dedupe_lookups = bool(dedupe_lookups)
+        self._clock = clock
+        self._adaptive = hasattr(state, "sels")
+        self.capacity = int(state.n_buckets) * state.table.shape[1]
+        self.stash_slots = 0 if stash is None else int(stash.shape[1])
+        self._fill_snapshot = (
+            float(jax.device_get(state.count)) / max(1, self.capacity), 0.0)
+        if admission is not None and not hasattr(admission, "admit"):
+            from repro.streaming.admission import AdmissionController
+            admission = AdmissionController(filt=self, config=admission)
+        self.admission = admission
+        self._inflight: Optional[OpWave] = None
+        self._deferred: deque[tuple[OpWave, np.ndarray]] = deque()
+        self.stats = BatcherStats()
+
+    # ----------------------------------------------------------- intake --
+
+    def submit(self, kind: str, keys) -> OpWave:
+        """Offer one wave -> its ``OpWave`` (results pending until harvest).
+
+        Parked insert waves are retried (FIFO) before the new wave, so
+        admission never reorders writes relative to each other."""
+        keys = np.ascontiguousarray(np.asarray(keys, np.uint64))
+        wave = OpWave(kind=kind, n=int(keys.size), submit_s=self._clock())
+        self.stats.waves += 1
+        self.stats.ops += wave.n
+        self._retry_deferred()
+        if (kind == "insert" and self.admission is not None
+                and not self.admission.admit()):
+            self._deferred.append((wave, keys))
+            self.stats.deferred_waves += 1
+            return wave
+        self._launch(wave, keys)
+        return wave
+
+    def flush(self) -> None:
+        """Materialize the in-flight wave (one ``block_until_ready``)."""
+        if self._inflight is not None:
+            self._harvest(self._inflight)
+
+    def drain(self, *, max_ticks: int = 100, on_held=None) -> int:
+        """Retry parked waves until none remain (or ``max_ticks``), then
+        flush -> number of ops still parked (shed).
+
+        ``on_held``: callback invoked when the gate holds with nothing
+        in flight to relieve it — the hook where a control plane ages or
+        deletes; without one the loop stops once holding makes no
+        progress, and the remainder counts as shed load."""
+        for _ in range(max_ticks):
+            if not self._deferred:
+                break
+            before = len(self._deferred)
+            self._retry_deferred()
+            if len(self._deferred) == before:
+                self.stats.held_ticks += 1
+                if on_held is None:
+                    break
+                on_held(self)
+        self.flush()
+        shed = sum(keys.size for _, keys in self._deferred)
+        self.stats.shed_ops += shed
+        return shed
+
+    def fills(self) -> tuple[float, float]:
+        """(table fill, stash fill) at the LAST harvest — the
+        ``GenerationalFilter.fills()`` duck, sync-free by construction."""
+        return self._fill_snapshot
+
+    # --------------------------------------------------------- pipeline --
+
+    def _retry_deferred(self) -> None:
+        while self._deferred:
+            if self.admission is not None and not self.admission.peek():
+                for parked, _ in self._deferred:
+                    parked.deferred_ticks += 1
+                break
+            wave, keys = self._deferred.popleft()
+            self._launch(wave, keys)
+
+    def _launch(self, wave: OpWave, keys: np.ndarray) -> None:
+        prev = self._inflight
+        self._dispatch(wave, keys)     # overlaps prev's device execution
+        self._inflight = wave
+        if prev is not None:
+            self._harvest(prev)
+        if not self.double_buffer:
+            self._harvest(wave)
+
+    def _prepare(self, wave: OpWave, keys: np.ndarray):
+        """Host-side wave prep: dedup (lookups), pad, hash split, upload."""
+        if wave.kind == "lookup" and self.dedupe_lookups:
+            keys, wave._inverse = dedupe_keys(keys)
+            if wave._inverse is not None:
+                self.stats.deduped_lanes += wave.n - keys.size
+        n = keys.size
+        assert n <= self.wave_slots, (n, self.wave_slots)
+        wave._n_probe = n
+        padded = np.zeros(self.wave_slots, np.uint64)
+        padded[:n] = keys
+        hi, lo = hashing.key_to_u32_pair_np(padded)
+        valid = np.zeros(self.wave_slots, bool)
+        valid[:n] = True
+        return jnp.asarray(hi), jnp.asarray(lo), jnp.asarray(valid)
+
+    def _dispatch(self, wave: OpWave, keys: np.ndarray) -> None:
+        """Queue the wave's device work; grab (results, count, occupancy)
+        refs for the harvest.  No host sync on this path."""
+        hi, lo, valid = self._prepare(wave, keys)
+        ops, state, stash = self.ops, self.state, self.stash
+        if wave.kind == "lookup":
+            if self._adaptive:
+                res = ops.lookup_adaptive(state, hi, lo, stash=stash)
+            elif stash is not None:
+                res = ops.lookup_with_stash(state, stash, hi, lo)
+            else:
+                res = ops.lookup(state, hi, lo)
+        elif wave.kind == "insert":
+            if self._adaptive and stash is not None:
+                self.state, self.stash, res = ops.insert_adaptive(
+                    state, hi, lo, valid=valid, stash=stash)
+            elif self._adaptive:
+                self.state, res = ops.insert_adaptive(state, hi, lo,
+                                                      valid=valid)
+            elif stash is not None:
+                self.state, self.stash, res = ops.insert_spill(
+                    state, stash, hi, lo, valid=valid)
+            else:
+                self.state, res = ops.insert(state, hi, lo, valid=valid)
+        elif wave.kind == "delete":
+            if self._adaptive:
+                out = ops.delete_adaptive(state, hi, lo, valid=valid,
+                                          stash=stash)
+                if stash is not None:
+                    self.state, self.stash, res = out
+                else:
+                    self.state, res = out
+            elif stash is not None:
+                table, new_stash, res = ops.delete_table(
+                    state.table, hi, lo, n_buckets=state.n_buckets,
+                    valid=valid, stash=stash)
+                # ok counts table AND stash clears; count tracks the table
+                stash_cleared = (kops.stash_occupancy(stash)
+                                 - kops.stash_occupancy(new_stash))
+                count = (state.count - jnp.sum(res, dtype=jnp.int32)
+                         + stash_cleared)
+                self.state = jfilter.FilterState(table, count,
+                                                 state.n_buckets)
+                self.stash = new_stash
+            else:
+                self.state, res = ops.delete(state, hi, lo, valid=valid)
+        elif wave.kind == "report":
+            if not self._adaptive:
+                raise ValueError("'report' waves need an AdaptiveState")
+            self.state, adapted, _resident = ops.report_false_positive(
+                state, hi, lo, valid=valid)
+            res = adapted
+        else:
+            raise ValueError(f"unknown wave kind {wave.kind!r}")
+        occ = (kops.stash_occupancy(self.stash)
+               if self.stash is not None else jnp.int32(0))
+        wave._device = (res, self.state.count, occ)
+
+    def _harvest(self, wave: OpWave) -> None:
+        """The ONLY sync point: materialize one wave's device refs."""
+        res, count, occ = jax.block_until_ready(wave._device)
+        out = np.asarray(res)[:wave._n_probe]
+        wave.results = out[wave._inverse] if wave._inverse is not None \
+            else out
+        wave._device = ()
+        wave.done_s = self._clock()
+        self._fill_snapshot = (
+            float(count) / max(1, self.capacity),
+            float(occ) / self.stash_slots if self.stash_slots else 0.0)
+        self.stats.harvests += 1
+        if wave is self._inflight:
+            self._inflight = None

@@ -47,19 +47,37 @@ def congestion_signal(stash_fill: float, gen_fill: float,
 
 @dataclasses.dataclass
 class AdmissionController:
-    """Hysteresis gate over a GenerationalFilter's congestion signal."""
+    """Hysteresis gate over a congestion signal read from ``filt.fills()``.
 
-    filt: GenerationalFilter
+    ``filt`` is any fills-duck — something with
+    ``fills() -> (fill, stash_fill)`` in [0, 1] each.  Shipping ducks:
+    ``GenerationalFilter`` (live device read), ``serving.scheduler.
+    ShardedFilterFills`` (sharded aggregate), and ``serving.scheduler.
+    FilterOpBatcher`` (last-harvest snapshot — sync-free, so the SLO
+    harness can gate every wave without stalling the submit pipeline).
+
+    ``last_signal`` / ``peak_signal`` record the most recent and worst
+    congestion reading — the SLO report surfaces them so a burst scenario
+    can show how close the gate came to (or how long it sat past) the
+    high-water mark.
+    """
+
+    filt: GenerationalFilter   # or any fills() duck, see docstring
     config: AdmissionConfig = dataclasses.field(
         default_factory=AdmissionConfig)
     tripped: bool = False
     admitted: int = 0
     deferred: int = 0
+    last_signal: float = 0.0
+    peak_signal: float = 0.0
 
     def signal(self) -> float:
         """Current congestion in [0, ~1] (one stacked device read)."""
         fill, stash_fill = self.filt.fills()
-        return congestion_signal(stash_fill, fill, self.config)
+        s = congestion_signal(stash_fill, fill, self.config)
+        self.last_signal = s
+        self.peak_signal = max(self.peak_signal, s)
+        return s
 
     def peek(self) -> bool:
         """Would a request be admitted right now?  Updates the hysteresis

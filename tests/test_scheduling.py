@@ -16,6 +16,11 @@ Covers the acceptance criteria of the scheduling/pipeline PR:
   * buffer donation consumes the caller's table (zero-copy contract) and
     produces the same results as the undonated call;
   * empty batches are safe through every scheduled/deduped entry point.
+
+The seeded tier-1 tests and the hypothesis property tests (bottom of the
+file; skipped when hypothesis isn't installed — it's an optional dep, so
+they are deliberately NOT tier1) share the same invariant checkers:
+``_check_dispatch_invariants`` and ``_check_dedupe_roundtrip``.
 """
 import jax
 import jax.numpy as jnp
@@ -37,7 +42,7 @@ from repro.streaming import PyStashFilter
 
 from conftest import random_keys
 
-pytestmark = pytest.mark.tier1
+tier1 = pytest.mark.tier1
 
 
 def _pair(keys):
@@ -48,13 +53,14 @@ def _pair(keys):
 # ------------------------------------------------------- wave pre-pass ----
 
 
-def test_waves_are_conflict_free_and_order_preserving(rng):
-    """Each wave holds at most one lane per bucket; same-bucket lanes keep
-    their original relative order; invalid lanes sort last."""
-    n, n_buckets = 1024, 64                    # dense conflicts
-    keys = random_keys(rng, n)
+def _check_dispatch_invariants(keys, valid, n_buckets):
+    """The full dispatch_order/conflict_waves contract on one batch:
+    perm is a permutation inverted by inv, invalid lanes park at the end,
+    dispatch is wave-major with at most one lane per bucket per wave, and
+    same-bucket lanes keep their original relative order."""
+    n = keys.size
     hi, lo = _pair(keys)
-    valid = jnp.asarray(rng.rand(n) < 0.9)
+    valid = jnp.asarray(np.asarray(valid, dtype=bool))
     i1 = np.asarray(hashing.index_hash_dyn(hi, lo, n_buckets), dtype=np.int64)
     perm, inv = dispatch_order(hi, lo, valid, n_buckets=n_buckets)
     perm, inv = np.asarray(perm), np.asarray(inv)
@@ -68,12 +74,13 @@ def test_waves_are_conflict_free_and_order_preserving(rng):
     # waves: walk the dispatch order; a bucket repeating within one wave
     # would mean the wave is not conflict-free
     waves = np.asarray(conflict_waves(jnp.asarray(i1), valid))
-    w_sorted = waves[perm[:n_valid]]
-    b_sorted = i1[perm[:n_valid]]
-    assert (np.diff(w_sorted) >= 0).all(), "dispatch must be wave-major"
-    for w in range(int(w_sorted.max()) + 1):
-        bw = b_sorted[w_sorted == w]
-        assert len(np.unique(bw)) == len(bw), f"wave {w} has a conflict"
+    if n_valid:
+        w_sorted = waves[perm[:n_valid]]
+        b_sorted = i1[perm[:n_valid]]
+        assert (np.diff(w_sorted) >= 0).all(), "dispatch must be wave-major"
+        for w in range(int(w_sorted.max()) + 1):
+            bw = b_sorted[w_sorted == w]
+            assert len(np.unique(bw)) == len(bw), f"wave {w} has a conflict"
     # same-bucket lanes keep original relative order (the property that
     # makes scheduling invisible to rank-based placement)
     pos = np.empty(n, dtype=np.int64)
@@ -81,8 +88,40 @@ def test_waves_are_conflict_free_and_order_preserving(rng):
     for b in np.unique(i1[v]):
         lanes = np.flatnonzero(v & (i1 == b))
         assert (np.diff(pos[lanes]) > 0).all()
+    # k valid copies of one key (same bucket, same fp) land in k distinct
+    # waves — the repeats the lookup dedup pre-pass collapses
+    ku = np.asarray(keys)
+    for k in np.unique(ku[v]):
+        dup_waves = waves[v & (ku == k)]
+        assert len(np.unique(dup_waves)) == dup_waves.size
+    assert int(wave_count(jnp.asarray(i1), valid)) == (
+        int(waves[v].max()) + 1 if n_valid else 0)
 
 
+def _check_dedupe_roundtrip(keys):
+    """dedupe_keys contract: probe_keys[inverse] reconstructs the batch
+    exactly; inverse is None iff the batch had no repeats."""
+    keys = np.asarray(keys, dtype=np.uint64)
+    uniq, inverse = dedupe_keys(keys)
+    if inverse is None:
+        assert np.unique(keys).size == keys.size
+        np.testing.assert_array_equal(uniq, keys)
+    else:
+        assert uniq.size < keys.size
+        assert np.unique(uniq).size == uniq.size
+        np.testing.assert_array_equal(uniq[inverse], keys)
+
+
+@tier1
+def test_waves_are_conflict_free_and_order_preserving(rng):
+    """Each wave holds at most one lane per bucket; same-bucket lanes keep
+    their original relative order; invalid lanes sort last."""
+    n, n_buckets = 1024, 64                    # dense conflicts
+    keys = random_keys(rng, n)
+    _check_dispatch_invariants(keys, rng.rand(n) < 0.9, n_buckets)
+
+
+@tier1
 def test_duplicate_keys_split_across_waves(rng):
     """In-batch repeats of one key (same bucket, same fp) are the repeats
     the scheduler deduplicates: k copies land in k distinct waves."""
@@ -104,6 +143,7 @@ def test_duplicate_keys_split_across_waves(rng):
 # --------------------------------------------- scheduled-dispatch parity --
 
 
+@tier1
 def test_scheduled_vs_unscheduled_membership_and_conservation(rng):
     """A contended spill batch lands the same keys with the same totals
     whether or not the wave pre-pass reorders the dispatch (duplicates in
@@ -138,6 +178,7 @@ def test_scheduled_vs_unscheduled_membership_and_conservation(rng):
     assert np.asarray(h0)[:keys.size].all()
 
 
+@tier1
 def test_scheduled_single_lane_residues_bit_for_bit_oracle(rng):
     """One key per batch through the FULL scheduled pipeline (FilterOps
     insert_spill: wave pre-pass + emulated kernel + spill + rollback) ==
@@ -166,6 +207,7 @@ def test_scheduled_single_lane_residues_bit_for_bit_oracle(rng):
 # ------------------------------------------------- emulation bit-parity ---
 
 
+@tier1
 def test_emulation_bit_for_bit_vs_interpreter(rng):
     """The XLA grid emulation IS the kernel: insert (multi-block, stash),
     probe (stash), delete, and the fused multi-generation probe all match
@@ -203,6 +245,7 @@ def test_emulation_bit_for_bit_vs_interpreter(rng):
 # ------------------------------------------------------------- dedup ------
 
 
+@tier1
 def test_lookup_dedup_answers_match_raw_batch(rng):
     """OCF.lookup's dedup pre-pass: a batch with heavy repeats answers
     exactly like the same batch probed lane-for-lane."""
@@ -224,6 +267,7 @@ def test_lookup_dedup_answers_match_raw_batch(rng):
 # ---------------------------------------------------------- donation ------
 
 
+@tier1
 def test_donation_consumes_input_and_matches_undonated(rng):
     """donate=True: same results, and the caller's table buffer is consumed
     (the zero-copy contract — reusing a donated buffer must fail loudly)."""
@@ -252,6 +296,7 @@ def test_donation_consumes_input_and_matches_undonated(rng):
 # ------------------------------------------------------------- guards -----
 
 
+@tier1
 def test_empty_batches_through_scheduled_pipeline(rng):
     e = jnp.zeros((0,), jnp.uint32)
     fops = FilterOps(fp_bits=16, backend="pallas", schedule=True,
@@ -270,3 +315,65 @@ def test_empty_batches_through_scheduled_pipeline(rng):
     assert ocf.lookup(empty).shape == (0,)
     perm, inv = dispatch_order(e, e, jnp.zeros((0,), bool), n_buckets=64)
     assert np.asarray(perm).shape == (0,) and np.asarray(inv).shape == (0,)
+
+
+# ------------------------------------------- hypothesis property tests ----
+# Optional-dep section: hypothesis is NOT a tier-1 dependency, so these
+# tests carry no tier1 mark and skip cleanly when the package is missing.
+# They drive the exact same invariant checkers as the seeded tests above,
+# but over adversarially-shrunk batches (empty, all-invalid, heavy
+# duplicates, tiny bucket counts).
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as hst
+    _HAVE_HYPOTHESIS = True
+except ImportError:
+    _HAVE_HYPOTHESIS = False
+
+needs_hypothesis = pytest.mark.skipif(
+    not _HAVE_HYPOTHESIS, reason="hypothesis not installed (optional dep)")
+
+if _HAVE_HYPOTHESIS:
+    _key_lists = hst.lists(hst.integers(min_value=1, max_value=2 ** 63 - 1),
+                           max_size=96)
+    # a tiny alphabet makes in-batch duplicates and bucket collisions the
+    # common case rather than the corner case
+    _dup_lists = hst.lists(hst.integers(min_value=1, max_value=12),
+                           max_size=64)
+    _n_buckets = hst.sampled_from([4, 16, 64, 1024])
+
+    @needs_hypothesis
+    @settings(max_examples=60, deadline=None)
+    @given(keys=_key_lists, n_buckets=_n_buckets, data=hst.data())
+    def test_property_dispatch_order_and_waves(keys, n_buckets, data):
+        keys = np.asarray(keys, dtype=np.uint64)
+        valid = np.asarray(
+            data.draw(hst.lists(hst.booleans(), min_size=keys.size,
+                                max_size=keys.size)), dtype=bool)
+        _check_dispatch_invariants(keys, valid, n_buckets)
+
+    @needs_hypothesis
+    @settings(max_examples=60, deadline=None)
+    @given(keys=_dup_lists, n_buckets=hst.sampled_from([4, 16]))
+    def test_property_duplicates_always_split(keys, n_buckets):
+        keys = np.asarray(keys, dtype=np.uint64)
+        _check_dispatch_invariants(keys, np.ones(keys.size, bool), n_buckets)
+
+    @needs_hypothesis
+    @settings(max_examples=80, deadline=None)
+    @given(keys=hst.one_of(_key_lists, _dup_lists))
+    def test_property_dedupe_roundtrip(keys):
+        _check_dedupe_roundtrip(np.asarray(keys, dtype=np.uint64))
+else:
+    @needs_hypothesis
+    def test_property_dispatch_order_and_waves():
+        raise AssertionError("unreachable without hypothesis")
+
+    @needs_hypothesis
+    def test_property_duplicates_always_split():
+        raise AssertionError("unreachable without hypothesis")
+
+    @needs_hypothesis
+    def test_property_dedupe_roundtrip():
+        raise AssertionError("unreachable without hypothesis")
