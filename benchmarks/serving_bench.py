@@ -32,7 +32,7 @@ import numpy as np
 from repro.core import OCF, OcfConfig
 from repro.serving.kvcache import PrefixCacheIndex
 from repro.serving.slo import (BENCH_SCENARIOS, bench_scenarios,
-                               run_scenario)
+                               run_scenario, run_scenario_telemetry)
 from repro.serving.workloads import SCENARIOS, scenario_stream
 
 
@@ -112,9 +112,24 @@ def main() -> None:
     ap.add_argument("--double-buffer", action="store_true",
                     help="force the double-buffered submit path (default: "
                          "auto — async only where the host can overlap)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="replay with device counter planes + trace spans "
+                         "on; writes slo_<scenario>_metrics.jsonl and a "
+                         "perfetto-loadable slo_<scenario>_trace.json into "
+                         "--telemetry-dir")
+    ap.add_argument("--telemetry-dir", default=".",
+                    help="directory for --telemetry artifacts")
     args = ap.parse_args()
 
     if args.scenario == "all":
+        if args.telemetry:
+            for name in BENCH_SCENARIOS:
+                rep, paths = run_scenario_telemetry(
+                    name, args.telemetry_dir, seed=args.seed)
+                _print_report(rep, arm="telemetry")
+                print(f"  metrics: {paths['metrics']}")
+                print(f"  trace:   {paths['trace']}")
+            return
         for k, v in bench_scenarios(args.seed).items():
             print(f"{k},{v}")
         return
@@ -124,6 +139,14 @@ def main() -> None:
             db = False
         elif args.double_buffer:
             db = True
+        if args.telemetry:
+            rep, paths = run_scenario_telemetry(
+                args.scenario, args.telemetry_dir, seed=args.seed,
+                double_buffer=db)
+            _print_report(rep, arm="telemetry")
+            print(f"  metrics: {paths['metrics']}")
+            print(f"  trace:   {paths['trace']}")
+            return
         rep = run_scenario(args.scenario, seed=args.seed, double_buffer=db)
         arm = {False: "sync", True: "double-buffered"}.get(db, "auto")
         _print_report(rep, arm=arm)

@@ -19,6 +19,11 @@ percentile of minima isn't a percentile), so they are noisier than the
 keys/s rows; CI sets the SLO threshold generously and the local default
 stays tight.
 
+Since ISSUE 9 the gate also holds the **telemetry contract**: the fresh
+``telemetry_overhead_pct`` row (telemetry-on vs -off arms of the same
+serving-wave stream, same run) must stay at or below
+``BENCH_GATE_TELEMETRY_PCT`` percent (default 5).
+
 Exit codes: 0 pass / 1 regression / 0 with a notice when there is no
 committed baseline (first run) or no git.  ``BENCH_GATE_THRESHOLD``
 overrides the drop threshold (fraction, default 0.20) — the CPU container
@@ -35,6 +40,7 @@ import sys
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 THRESHOLD = float(os.environ.get("BENCH_GATE_THRESHOLD", "0.20"))
 SLO_THRESHOLD = float(os.environ.get("BENCH_GATE_SLO_THRESHOLD", "0.25"))
+TELEMETRY_PCT = float(os.environ.get("BENCH_GATE_TELEMETRY_PCT", "5.0"))
 
 # Scenarios whose percentile rows must exist in every fresh bench run
 # (ISSUE 8 acceptance: the matrix can't silently shrink).
@@ -135,6 +141,20 @@ def main() -> int:
         bad.append(f"  burst_train: default submit path p99 {dflt_p99} us "
                    f"fell behind the sync arm {sync_p99} us (same-run, "
                    f"limit +{SLO_THRESHOLD:.0%})")
+    # ISSUE-9 acceptance: telemetry must stay near-free on the wave path.
+    # ``telemetry_overhead_pct`` compares the telemetry-on and -off arms of
+    # the SAME mixed wave stream measured in the same run (fresh batcher per
+    # arm, arms alternated per trial), so like the routed/hostloop pair the
+    # comparison is weather-free; the raw per-twin rows stay informational
+    # because the CPU emulation re-materializes gather chains the fused TPU
+    # probe would not (see benchmarks/filter_bench.py::telemetry_rows).
+    tel = fresh.get("telemetry_overhead_pct")
+    if tel is None:
+        bad.append("  telemetry_overhead_pct: row missing from fresh bench")
+    elif tel > TELEMETRY_PCT:
+        bad.append(f"  telemetry_overhead_pct: {tel}% wave-path overhead "
+                   f"above the {TELEMETRY_PCT}% ceiling "
+                   f"(BENCH_GATE_TELEMETRY_PCT overrides)")
     if bad:
         print(f"bench gate FAILED ({len(bad)} row(s) regressed "
               f">{THRESHOLD:.0%}):")
@@ -146,7 +166,9 @@ def main() -> int:
     n = sum(1 for k in committed if k.endswith("_keys_per_s"))
     n_slo = sum(1 for k in committed if k.endswith("_p99_us"))
     print(f"bench gate OK ({n} keys/s rows within -{THRESHOLD:.0%}, "
-          f"{n_slo} p99 rows within +{SLO_THRESHOLD:.0%} of baseline)")
+          f"{n_slo} p99 rows within +{SLO_THRESHOLD:.0%} of baseline, "
+          f"telemetry wave overhead {fresh.get('telemetry_overhead_pct')}% "
+          f"<= {TELEMETRY_PCT}%)")
     return 0
 
 

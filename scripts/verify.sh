@@ -37,8 +37,39 @@ python benchmarks/filter_bench.py
 
 echo "== bench-regression gate =="
 # Fails if any *_keys_per_s row in the fresh BENCH_filter.json dropped >20%
-# below the committed baseline, or any slo_*_p99_us row rose >25%
-# (BENCH_GATE_THRESHOLD / BENCH_GATE_SLO_THRESHOLD override).
+# below the committed baseline, any slo_*_p99_us row rose >25%, or the
+# telemetry wave-path overhead exceeded 5% (BENCH_GATE_THRESHOLD /
+# BENCH_GATE_SLO_THRESHOLD / BENCH_GATE_TELEMETRY_PCT override).
 python scripts/bench_gate.py
+
+echo "== telemetry smoke =="
+# Replay the burst_train scenario with counter planes + spans on and check
+# both exported artifacts are well-formed: a non-empty metrics JSONL and a
+# perfetto-loadable Chrome trace with at least one complete span.
+# TELEMETRY_DIR keeps the artifacts (CI uploads them); default is a temp
+# dir cleaned on exit.
+if [[ -n "${TELEMETRY_DIR:-}" ]]; then
+  TDIR="$TELEMETRY_DIR"
+  mkdir -p "$TDIR"
+else
+  TDIR="$(mktemp -d)"
+  trap 'rm -rf "$TDIR"' EXIT
+fi
+python benchmarks/serving_bench.py --scenario burst_train \
+  --telemetry --telemetry-dir "$TDIR" > /dev/null
+python - "$TDIR" <<'EOF'
+import json, sys, os
+tdir = sys.argv[1]
+metrics = os.path.join(tdir, "slo_burst_train_metrics.jsonl")
+trace = os.path.join(tdir, "slo_burst_train_trace.json")
+lines = [json.loads(l) for l in open(metrics) if l.strip()]
+assert lines, "telemetry metrics JSONL is empty"
+with open(trace) as f:
+    tr = json.load(f)
+events = tr["traceEvents"]
+assert any(e.get("ph") == "X" for e in events), "trace has no complete spans"
+print(f"telemetry smoke OK ({len(lines)} metric records, "
+      f"{len(events)} trace events)")
+EOF
 
 echo "verify OK"

@@ -457,3 +457,129 @@ class FilterOps:
         return kops.filter_delete(table, hi, lo, fp_bits=self.fp_bits,
                                   n_buckets=n_buckets, valid=valid,
                                   stash=stash, use_pallas=up)
+
+    # --------------------------------------------------- telemetry twins --
+    #
+    # Each ``*_tm`` method is the corresponding op plus a device-computed
+    # ``kernels.telemetry.FilterTelemetry`` (kick-depth histogram, probe
+    # hit-depth, spill / rollback / delete counters, stash high-water).
+    # The twins pin the KERNEL arm (the XLA emulation of the kernel
+    # schedule — bit-for-bit the pallas_call by the PR-5 parity contract)
+    # and compile as separate jits, so:
+    #   * answers never depend on whether counters are on, and
+    #   * the telemetry-off methods above keep their exact dispatch —
+    #     nothing here runs unless a caller asks for telemetry.
+    # They are NOT in the hot path's method bodies on purpose: the
+    # dispatch-spy tier-1 test pins the off path to the pre-telemetry
+    # device-call sequence.
+
+    def lookup_tm(self, state: jfilter.FilterState, hi: jax.Array,
+                  lo: jax.Array):
+        """``lookup`` + telemetry -> (hit[N], FilterTelemetry)."""
+        return kops.probe_dispatch_tm(state.table, hi, lo,
+                                      fp_bits=self.fp_bits,
+                                      n_buckets=state.n_buckets)
+
+    def lookup_with_stash_tm(self, state: jfilter.FilterState,
+                             stash: jax.Array, hi: jax.Array, lo: jax.Array):
+        """``lookup_with_stash`` + telemetry -> (hit[N], FilterTelemetry)."""
+        return kops.probe_dispatch_tm(state.table, hi, lo,
+                                      fp_bits=self.fp_bits,
+                                      n_buckets=state.n_buckets, stash=stash)
+
+    def insert_tm(self, state: jfilter.FilterState, hi: jax.Array,
+                  lo: jax.Array, valid: Optional[jax.Array] = None):
+        """``insert`` + telemetry -> (state, ok[N], FilterTelemetry)."""
+        table, ok, tm = kops.filter_insert_tm(
+            state.table, hi, lo, fp_bits=self.fp_bits,
+            n_buckets=state.n_buckets, valid=valid,
+            evict_rounds=self.evict_rounds, schedule=self.schedule,
+            donate=self.donate)
+        return jfilter.FilterState(
+            table, state.count + jnp.sum(ok, dtype=jnp.int32),
+            state.n_buckets), ok, tm
+
+    def insert_spill_tm(self, state: jfilter.FilterState, stash: jax.Array,
+                        hi: jax.Array, lo: jax.Array,
+                        valid: Optional[jax.Array] = None):
+        """``insert_spill`` + telemetry -> (state, stash, ok[N], tm)."""
+        spilled_before = kops.stash_occupancy(stash)
+        table, new_stash, ok, tm = kops.filter_insert_tm(
+            state.table, hi, lo, fp_bits=self.fp_bits,
+            n_buckets=state.n_buckets, valid=valid,
+            evict_rounds=self.evict_rounds, stash=stash,
+            schedule=self.schedule, donate=self.donate)
+        newly_stashed = kops.stash_occupancy(new_stash) - spilled_before
+        count = state.count + jnp.sum(ok, dtype=jnp.int32) - newly_stashed
+        return jfilter.FilterState(table, count, state.n_buckets), \
+            new_stash, ok, tm
+
+    def delete_tm(self, state: jfilter.FilterState, hi: jax.Array,
+                  lo: jax.Array, valid: Optional[jax.Array] = None):
+        """``delete`` + telemetry -> (state, ok[N], FilterTelemetry)."""
+        table, ok, tm = kops.filter_delete_tm(
+            state.table, hi, lo, fp_bits=self.fp_bits,
+            n_buckets=state.n_buckets, valid=valid, donate=self.donate)
+        return jfilter.FilterState(
+            table, state.count - jnp.sum(ok, dtype=jnp.int32),
+            state.n_buckets), ok, tm
+
+    def lookup_adaptive_tm(self, state, hi: jax.Array, lo: jax.Array,
+                           stash: Optional[jax.Array] = None):
+        """``lookup_adaptive`` + telemetry -> (hit[N], FilterTelemetry)."""
+        return kops.adaptive_lookup_tm(
+            state.table, state.sels, hi, lo, fp_bits=self.fp_bits,
+            n_buckets=state.n_buckets, stash=stash)
+
+    def insert_adaptive_tm(self, state, hi: jax.Array, lo: jax.Array,
+                           valid: Optional[jax.Array] = None,
+                           stash: Optional[jax.Array] = None):
+        """``insert_adaptive`` + telemetry -> (..., ok[N], tm)."""
+        if stash is not None:
+            spilled_before = kops.stash_occupancy(stash)
+        out = kops.adaptive_insert_tm(
+            state.table, state.sels, state.khi, state.klo, hi, lo,
+            fp_bits=self.fp_bits, n_buckets=state.n_buckets, valid=valid,
+            evict_rounds=self.evict_rounds, stash=stash,
+            schedule=self.schedule, donate=self.donate)
+        tm = out[-1]
+        ok = out[-2]
+        count = state.count + jnp.sum(ok, dtype=jnp.int32)
+        if stash is None:
+            table, sels, khi, klo = out[:4]
+            return state._replace(table=table, sels=sels, khi=khi, klo=klo,
+                                  count=count), ok, tm
+        table, sels, khi, klo, new_stash = out[:5]
+        count = count - (kops.stash_occupancy(new_stash) - spilled_before)
+        return state._replace(table=table, sels=sels, khi=khi, klo=klo,
+                              count=count), new_stash, ok, tm
+
+    def delete_adaptive_tm(self, state, hi: jax.Array, lo: jax.Array,
+                           valid: Optional[jax.Array] = None,
+                           stash: Optional[jax.Array] = None):
+        """``delete_adaptive`` + telemetry -> (..., ok[N], tm)."""
+        out = kops.adaptive_delete_tm(
+            state.table, state.sels, state.khi, state.klo, hi, lo,
+            fp_bits=self.fp_bits, n_buckets=state.n_buckets, valid=valid,
+            stash=stash, donate=self.donate)
+        tm = out[-1]
+        ok = out[-2]
+        if stash is None:
+            table, sels, khi, klo = out[:4]
+            count = state.count - jnp.sum(ok, dtype=jnp.int32)
+            return state._replace(table=table, sels=sels, khi=khi, klo=klo,
+                                  count=count), ok, tm
+        table, sels, khi, klo, new_stash = out[:5]
+        stash_cleared = (kops.stash_occupancy(stash)
+                         - kops.stash_occupancy(new_stash))
+        count = state.count - jnp.sum(ok, dtype=jnp.int32) + stash_cleared
+        return state._replace(table=table, sels=sels, khi=khi, klo=klo,
+                              count=count), new_stash, ok, tm
+
+    def report_false_positive_tm(self, state, hi: jax.Array, lo: jax.Array,
+                                 valid: Optional[jax.Array] = None):
+        """``report_false_positive`` + telemetry (``selector_bumps``)."""
+        table, sels, adapted, resident, tm = kops.adaptive_report_tm(
+            state.table, state.sels, state.khi, state.klo, hi, lo,
+            fp_bits=self.fp_bits, n_buckets=state.n_buckets, valid=valid)
+        return state._replace(table=table, sels=sels), adapted, resident, tm

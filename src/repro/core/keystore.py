@@ -46,6 +46,16 @@ class VectorKeystore:
     def contains(self, key: int) -> bool:
         return self.multiplicity(key) > 0
 
+    def contains_batch(self, keys) -> np.ndarray:
+        """Residency mask bool[B] for a query batch — one searchsorted over
+        the sorted uniques instead of B scalar probes (the metrics module's
+        ground-truth pass was the last per-key Python loop in the repo)."""
+        keys = np.asarray(keys, dtype=np.uint64)
+        if keys.size == 0 or not self._keys.size:
+            return np.zeros(keys.size, bool)
+        _, hit = self._locate(keys)
+        return hit
+
     def materialize(self) -> np.ndarray:
         """All keys with multiplicity, as uint64[total] (rebuild input)."""
         return np.repeat(self._keys, self._counts)

@@ -250,6 +250,12 @@ class OCF:
     def contains_key_exact(self, key: int) -> bool:
         return self.keystore.contains(int(key))
 
+    def contains_keys_exact(self, keys) -> np.ndarray:
+        """Vectorized ground truth: residency mask bool[B] in one keystore
+        pass (``measure_false_positives`` probes millions of keys — the
+        scalar form would loop Python per key)."""
+        return self.keystore.contains_batch(keys)
+
     # ---------------------------------------------------------- control --
 
     def _maybe_resize(self, extra: int = 0, ops: int = 1) -> None:

@@ -67,7 +67,9 @@ from repro.core import hashing
 from repro.core.scheduling import dispatch_order
 from repro.kernels.rank import rank_among_earlier
 from repro.kernels.selector import sel_pack, sel_unpack
-from repro.kernels.stash import stash_spill
+from repro.kernels.stash import stash_occupancy, stash_spill
+from repro.kernels.telemetry import (empty_telemetry, kick_histogram,
+                                     merge as tm_merge)
 
 DEFAULT_BLOCK = 1024
 # Bounded eviction budget.  The loop is a while_loop that exits as soon as
@@ -101,7 +103,7 @@ def _place_round(table, target, active, fp):
 
 
 def _evict_rounds(table, fp, start_bucket, residue, n_buckets, rounds: int,
-                  stash=None):
+                  stash=None, want_stats: bool = False):
     """Bounded device-side eviction rounds for the contended residue.
 
     Each residual lane carries a fingerprint (initially its own; after a
@@ -194,6 +196,8 @@ def _evict_rounds(table, fp, start_bucket, residue, n_buckets, rounds: int,
     if stash is not None:
         stash, spilled = stash_spill(stash, carried, bucket, active)
         active = active & ~spilled
+    elif want_stats:
+        spilled = jnp.zeros_like(active)
 
     # Rollback: lanes still carrying restore their kicks newest-first; the
     # dirty discipline above makes every restored slot exclusively theirs.
@@ -216,25 +220,52 @@ def _evict_rounds(table, fp, start_bucket, residue, n_buckets, rounds: int,
         jnp.any(failed),
         lambda tc: jax.lax.fori_loop(0, rounds, rb_body, tc),
         lambda tc: tc, (table, carried))
+    # Telemetry-twin extras: per-lane chain length + spill/rollback masks
+    # (the raw material the dispatch layer folds into FilterTelemetry).
+    stats = (steps, spilled, failed) if want_stats else None
     if stash is not None:
+        if want_stats:
+            return table, stash, residue & ~failed, stats
         return table, stash, residue & ~failed
+    if want_stats:
+        return table, residue & ~failed, stats
     return table, residue & ~failed
 
 
 def _insert_body(table, stash, hi, lo, valid, n_buckets, *, fp_bits: int,
-                 evict_rounds: int):
-    """Optimistic rounds + eviction rounds (+ stash spill) on loaded values."""
+                 evict_rounds: int, want_stats: bool = False):
+    """Optimistic rounds + eviction rounds (+ stash spill) on loaded values.
+
+    ``want_stats`` (trace-time bool) additionally returns a
+    ``FilterTelemetry`` for the block: kick-depth histogram over every
+    valid lane (optimistic placements count as depth 0), spill / rollback
+    lane counts, and the stash occupancy high-water after this block.  The
+    default-False trace is byte-identical to a build without the flag.
+    """
+    n = hi.shape[0]
     fp = hashing.fingerprint(hi, lo, fp_bits)
     i1 = hashing.index_hash_dyn(hi, lo, n_buckets).astype(jnp.int32)
     i2 = hashing.alt_index_dyn(i1, fp, n_buckets).astype(jnp.int32)
     table, ok1 = _place_round(table, i1, valid, fp)
     table, ok2 = _place_round(table, i2, valid & ~ok1, fp)
     ok = ok1 | ok2
+    steps = jnp.zeros((n,), jnp.int32)
+    spilled = jnp.zeros((n,), jnp.bool_)
+    failed = jnp.zeros((n,), jnp.bool_)
     if evict_rounds > 0:
         # Chains start at the alternate bucket, matching the sequential path.
         if stash is None:
-            table, completed = _evict_rounds(table, fp, i2, valid & ~ok,
-                                             n_buckets, evict_rounds)
+            if want_stats:
+                table, completed, (steps, spilled, failed) = _evict_rounds(
+                    table, fp, i2, valid & ~ok, n_buckets, evict_rounds,
+                    want_stats=True)
+            else:
+                table, completed = _evict_rounds(table, fp, i2, valid & ~ok,
+                                                 n_buckets, evict_rounds)
+        elif want_stats:
+            table, stash, completed, (steps, spilled, failed) = _evict_rounds(
+                table, fp, i2, valid & ~ok, n_buckets, evict_rounds,
+                stash=stash, want_stats=True)
         else:
             table, stash, completed = _evict_rounds(
                 table, fp, i2, valid & ~ok, n_buckets, evict_rounds,
@@ -244,9 +275,18 @@ def _insert_body(table, stash, hi, lo, valid, n_buckets, *, fp_bits: int,
         # No eviction budget at all: the optimistic residue spills straight
         # to the stash (bound for its alternate bucket, where a chain would
         # have started).
-        stash, spilled = stash_spill(stash, fp, i2, valid & ~ok)
-        ok = ok | spilled
-    return table, stash, ok
+        stash, spilled0 = stash_spill(stash, fp, i2, valid & ~ok)
+        ok = ok | spilled0
+        spilled = spilled0
+    if not want_stats:
+        return table, stash, ok
+    tm = empty_telemetry()._replace(
+        kick_hist=kick_histogram(steps, valid),
+        stash_spills=jnp.sum(spilled).astype(jnp.uint32),
+        rollback_lanes=jnp.sum(failed).astype(jnp.uint32),
+        stash_fill_hw=(stash_occupancy(stash).astype(jnp.uint32)
+                       if stash is not None else jnp.zeros((), jnp.uint32)))
+    return table, stash, ok, tm
 
 
 def _insert_kernel(n_ref, table_in_ref, hi_ref, lo_ref, valid_ref, table_ref,
@@ -273,7 +313,8 @@ def _insert_stash_kernel(n_ref, table_in_ref, stash_in_ref, hi_ref, lo_ref,
 
 
 def _emulated_insert(table, stash, hi, lo, valid, n_buckets, *,
-                     fp_bits: int, evict_rounds: int, block: int):
+                     fp_bits: int, evict_rounds: int, block: int,
+                     want_stats: bool = False):
     """The kernel schedule compiled by XLA instead of the Pallas interpreter.
 
     Bit-for-bit the grid semantics of the ``pallas_call`` below: blocks run
@@ -284,8 +325,29 @@ def _emulated_insert(table, stash, hi, lo, valid, n_buckets, *,
     is a *throughput* configuration on CPU hosts too, not just a
     correctness one (the interpreter re-dispatches every primitive per
     grid step, which is ~100x slower than the compiled scan).
+
+    ``want_stats`` rides the per-block ``FilterTelemetry`` in the scan
+    carry (fixed shape) and merges it across blocks — returns an extra tm.
     """
     g = hi.shape[0] // block
+    if want_stats:
+        if g == 1:
+            return _insert_body(table, stash, hi, lo, valid, n_buckets,
+                                fp_bits=fp_bits, evict_rounds=evict_rounds,
+                                want_stats=True)
+        xs = (hi.reshape(g, block), lo.reshape(g, block),
+              valid.reshape(g, block))
+
+        def step(carry, x):
+            tbl, st, tm = carry
+            tbl, st, ok, tm_b = _insert_body(
+                tbl, st, *x, n_buckets, fp_bits=fp_bits,
+                evict_rounds=evict_rounds, want_stats=True)
+            return (tbl, st, tm_merge(tm, tm_b)), ok
+
+        (table, stash, tm), ok = jax.lax.scan(
+            step, (table, stash, empty_telemetry()), xs)
+        return table, stash, ok.reshape(-1), tm
     if g == 1:
         table, stash, ok = _insert_body(table, stash, hi, lo, valid,
                                         n_buckets, fp_bits=fp_bits,
@@ -318,7 +380,8 @@ def _insert_bulk_impl(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
                       fp_bits: int, n_buckets=None, valid=None,
                       evict_rounds: int = DEFAULT_EVICT_ROUNDS, stash=None,
                       block: int = DEFAULT_BLOCK, interpret: bool = True,
-                      emulate: bool = False, schedule: bool = False):
+                      emulate: bool = False, schedule: bool = False,
+                      telemetry: bool = False):
     n = hi.shape[0]
     block = min(block, n)
     assert n % block == 0, f"{n=} not a multiple of {block=}"
@@ -342,6 +405,21 @@ def _insert_bulk_impl(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
         # any lane's placement rank.
         perm, inv = dispatch_order(hi, lo, valid, n_buckets=n_buckets)
         hi, lo, valid = hi[perm], lo[perm], valid[perm]
+    if telemetry:
+        # Telemetry twin: always the XLA-emulation arm (same bits as the
+        # kernel by the PR-5 parity contract; on TPU this trades the
+        # pallas_call for a compiled scan — a perf configuration, never a
+        # correctness one).  The per-lane stats are permutation-invariant
+        # sums/histograms, so the schedule pre-pass needs no inverse
+        # scatter on the telemetry, only on ``ok``.
+        new_table, new_stash, ok, tm = _emulated_insert(
+            table, stash, hi, lo, valid, n_buckets, fp_bits=fp_bits,
+            evict_rounds=evict_rounds, block=block, want_stats=True)
+        if schedule:
+            ok = ok[inv]
+        if stash is None:
+            return new_table, ok, tm
+        return new_table, new_stash, ok, tm
     if emulate:
         new_table, new_stash, ok = _emulated_insert(
             table, stash, hi, lo, valid, n_buckets, fp_bits=fp_bits,
@@ -401,6 +479,15 @@ _insert_bulk_jit = jax.jit(_insert_bulk_impl, static_argnames=_INSERT_STATICS)
 _insert_bulk_donated = jax.jit(_insert_bulk_impl,
                                static_argnames=_INSERT_STATICS,
                                donate_argnames=("table", "stash"))
+# Telemetry twins: separate jit objects, so the telemetry-off entry above
+# keeps its exact cache keys and dispatch path — enabling counters never
+# recompiles or re-routes the hot path.
+_INSERT_TM_STATICS = _INSERT_STATICS + ("telemetry",)
+_insert_bulk_tm_jit = jax.jit(_insert_bulk_impl,
+                              static_argnames=_INSERT_TM_STATICS)
+_insert_bulk_tm_donated = jax.jit(_insert_bulk_impl,
+                                  static_argnames=_INSERT_TM_STATICS,
+                                  donate_argnames=("table", "stash"))
 
 
 def insert_bulk(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
@@ -439,6 +526,28 @@ def insert_bulk(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
               valid=valid, evict_rounds=evict_rounds, stash=stash,
               block=block, interpret=interpret, emulate=emulate,
               schedule=schedule)
+
+
+def insert_bulk_tm(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
+                   fp_bits: int, n_buckets=None, valid=None,
+                   evict_rounds: int = DEFAULT_EVICT_ROUNDS, stash=None,
+                   block: int = DEFAULT_BLOCK, schedule: bool = False,
+                   donate: bool = False):
+    """Telemetry twin of ``insert_bulk`` -> the same results plus a
+    ``FilterTelemetry`` (kick-depth histogram, spill / rollback counts,
+    stash fill high-water).
+
+    Same placement bits as ``insert_bulk`` — the twin runs the XLA
+    emulation arm of the kernel schedule (bit-for-bit by the PR-5 parity
+    contract), so answers never depend on whether counters are on.
+    Compiled as its own jit: calling this never touches the telemetry-off
+    entry's cache or dispatch.
+    """
+    fn = _insert_bulk_tm_donated if donate else _insert_bulk_tm_jit
+    return fn(table, hi, lo, fp_bits=fp_bits, n_buckets=n_buckets,
+              valid=valid, evict_rounds=evict_rounds, stash=stash,
+              block=block, interpret=False, emulate=True, schedule=schedule,
+              telemetry=True)
 
 
 # ------------------------------------------- selector-aware (adaptive) -----
@@ -485,7 +594,8 @@ def _place_round_adaptive(planes, target, active, fp, khi, klo):
 
 
 def _evict_rounds_adaptive(planes, hi, lo, start_bucket, residue, n_buckets,
-                           rounds: int, *, fp_bits: int, stash=None):
+                           rounds: int, *, fp_bits: int, stash=None,
+                           want_stats: bool = False):
     """Bounded eviction rounds over the four adaptive planes.
 
     Lanes carry the KEY (hi, lo) — the carried fingerprint is always its
@@ -579,6 +689,8 @@ def _evict_rounds_adaptive(planes, hi, lo, start_bucket, residue, n_buckets,
         cfp = hashing.fingerprint(chi, clo, fp_bits)
         stash, spilled = stash_spill(stash, cfp, bucket, active)
         active = active & ~spilled
+    elif want_stats:
+        spilled = jnp.zeros_like(active)
 
     failed = active
 
@@ -604,18 +716,26 @@ def _evict_rounds_adaptive(planes, hi, lo, start_bucket, residue, n_buckets,
         jnp.any(failed),
         lambda p: jax.lax.fori_loop(0, rounds, rb_body, p),
         lambda p: p, (table, sel_tbl, khi_t, klo_t))
+    stats = (steps, spilled, failed) if want_stats else None
     if stash is not None:
+        if want_stats:
+            return planes, stash, residue & ~failed, stats
         return planes, stash, residue & ~failed
+    if want_stats:
+        return planes, residue & ~failed, stats
     return planes, residue & ~failed
 
 
 def _insert_adaptive_body(table, sels, khi_t, klo_t, stash, hi, lo, valid,
-                          n_buckets, *, fp_bits: int, evict_rounds: int):
+                          n_buckets, *, fp_bits: int, evict_rounds: int,
+                          want_stats: bool = False):
     """Optimistic + eviction rounds over the four adaptive planes.
 
     ``sels`` is the PACKED plane; pack∘unpack is the identity, so per-block
     repacking keeps the pallas grid and the emulation scan bit-for-bit.
+    ``want_stats`` mirrors the static body's telemetry extras.
     """
+    n = hi.shape[0]
     bucket_size = table.shape[-1]
     sel_tbl = sel_unpack(sels, bucket_size)
     fp = hashing.fingerprint(hi, lo, fp_bits)
@@ -625,21 +745,44 @@ def _insert_adaptive_body(table, sels, khi_t, klo_t, stash, hi, lo, valid,
     planes, ok1 = _place_round_adaptive(planes, i1, valid, fp, hi, lo)
     planes, ok2 = _place_round_adaptive(planes, i2, valid & ~ok1, fp, hi, lo)
     ok = ok1 | ok2
+    steps = jnp.zeros((n,), jnp.int32)
+    spilled = jnp.zeros((n,), jnp.bool_)
+    failed = jnp.zeros((n,), jnp.bool_)
     if evict_rounds > 0:
         if stash is None:
-            planes, completed = _evict_rounds_adaptive(
-                planes, hi, lo, i2, valid & ~ok, n_buckets, evict_rounds,
-                fp_bits=fp_bits)
+            if want_stats:
+                planes, completed, (steps, spilled, failed) = (
+                    _evict_rounds_adaptive(
+                        planes, hi, lo, i2, valid & ~ok, n_buckets,
+                        evict_rounds, fp_bits=fp_bits, want_stats=True))
+            else:
+                planes, completed = _evict_rounds_adaptive(
+                    planes, hi, lo, i2, valid & ~ok, n_buckets, evict_rounds,
+                    fp_bits=fp_bits)
+        elif want_stats:
+            planes, stash, completed, (steps, spilled, failed) = (
+                _evict_rounds_adaptive(
+                    planes, hi, lo, i2, valid & ~ok, n_buckets, evict_rounds,
+                    fp_bits=fp_bits, stash=stash, want_stats=True))
         else:
             planes, stash, completed = _evict_rounds_adaptive(
                 planes, hi, lo, i2, valid & ~ok, n_buckets, evict_rounds,
                 fp_bits=fp_bits, stash=stash)
         ok = ok | completed
     elif stash is not None:
-        stash, spilled = stash_spill(stash, fp, i2, valid & ~ok)
-        ok = ok | spilled
+        stash, spilled0 = stash_spill(stash, fp, i2, valid & ~ok)
+        ok = ok | spilled0
+        spilled = spilled0
     table, sel_tbl, khi_t, klo_t = planes
-    return table, sel_pack(sel_tbl), khi_t, klo_t, stash, ok
+    if not want_stats:
+        return table, sel_pack(sel_tbl), khi_t, klo_t, stash, ok
+    tm = empty_telemetry()._replace(
+        kick_hist=kick_histogram(steps, valid),
+        stash_spills=jnp.sum(spilled).astype(jnp.uint32),
+        rollback_lanes=jnp.sum(failed).astype(jnp.uint32),
+        stash_fill_hw=(stash_occupancy(stash).astype(jnp.uint32)
+                       if stash is not None else jnp.zeros((), jnp.uint32)))
+    return table, sel_pack(sel_tbl), khi_t, klo_t, stash, ok, tm
 
 
 def _insert_adaptive_kernel(n_ref, table_in, sels_in, khi_in, klo_in, hi_ref,
@@ -678,10 +821,28 @@ def _insert_adaptive_stash_kernel(n_ref, table_in, sels_in, khi_in, klo_in,
 
 def _emulated_insert_adaptive(table, sels, khi_t, klo_t, stash, hi, lo, valid,
                               n_buckets, *, fp_bits: int, evict_rounds: int,
-                              block: int):
+                              block: int, want_stats: bool = False):
     """The adaptive kernel schedule as a compiled XLA scan (the off-TPU
     path) — same ``_insert_adaptive_body`` per block, planes carried."""
     g = hi.shape[0] // block
+    if want_stats:
+        if g == 1:
+            return _insert_adaptive_body(
+                table, sels, khi_t, klo_t, stash, hi, lo, valid, n_buckets,
+                fp_bits=fp_bits, evict_rounds=evict_rounds, want_stats=True)
+        xs = (hi.reshape(g, block), lo.reshape(g, block),
+              valid.reshape(g, block))
+
+        def step(carry, x):
+            t, s, kh, kl, st, tm = carry
+            t, s, kh, kl, st, ok, tm_b = _insert_adaptive_body(
+                t, s, kh, kl, st, *x, n_buckets, fp_bits=fp_bits,
+                evict_rounds=evict_rounds, want_stats=True)
+            return (t, s, kh, kl, st, tm_merge(tm, tm_b)), ok
+
+        (table, sels, khi_t, klo_t, stash, tm), ok = jax.lax.scan(
+            step, (table, sels, khi_t, klo_t, stash, empty_telemetry()), xs)
+        return table, sels, khi_t, klo_t, stash, ok.reshape(-1), tm
     if g == 1:
         return _insert_adaptive_body(table, sels, khi_t, klo_t, stash, hi,
                                      lo, valid, n_buckets, fp_bits=fp_bits,
@@ -717,7 +878,7 @@ def _insert_adaptive_impl(table, sels, khi_t, klo_t, hi, lo, *, fp_bits: int,
                           evict_rounds: int = DEFAULT_EVICT_ROUNDS,
                           stash=None, block: int = DEFAULT_BLOCK,
                           interpret: bool = True, emulate: bool = False,
-                          schedule: bool = False):
+                          schedule: bool = False, telemetry: bool = False):
     n = hi.shape[0]
     block = min(block, n)
     assert n % block == 0, f"{n=} not a multiple of {block=}"
@@ -732,6 +893,17 @@ def _insert_adaptive_impl(table, sels, khi_t, klo_t, hi, lo, *, fp_bits: int,
     if schedule:
         perm, inv = dispatch_order(hi, lo, valid, n_buckets=n_buckets)
         hi, lo, valid = hi[perm], lo[perm], valid[perm]
+    if telemetry:
+        # Telemetry twin — emulation arm, same bits (see _insert_bulk_impl).
+        table, sels, khi_t, klo_t, stash, ok, tm = _emulated_insert_adaptive(
+            table, sels, khi_t, klo_t, stash, hi, lo, valid, n_buckets,
+            fp_bits=fp_bits, evict_rounds=evict_rounds, block=block,
+            want_stats=True)
+        if schedule:
+            ok = ok[inv]
+        if stash is None:
+            return table, sels, khi_t, klo_t, ok, tm
+        return table, sels, khi_t, klo_t, stash, ok, tm
     if emulate:
         table, sels, khi_t, klo_t, stash, ok = _emulated_insert_adaptive(
             table, sels, khi_t, klo_t, stash, hi, lo, valid, n_buckets,
@@ -792,6 +964,11 @@ _insert_adaptive_jit = jax.jit(_insert_adaptive_impl,
 _insert_adaptive_donated = jax.jit(
     _insert_adaptive_impl, static_argnames=_INSERT_STATICS,
     donate_argnames=("table", "sels", "khi_t", "klo_t", "stash"))
+_insert_adaptive_tm_jit = jax.jit(_insert_adaptive_impl,
+                                  static_argnames=_INSERT_TM_STATICS)
+_insert_adaptive_tm_donated = jax.jit(
+    _insert_adaptive_impl, static_argnames=_INSERT_TM_STATICS,
+    donate_argnames=("table", "sels", "khi_t", "klo_t", "stash"))
 
 
 def insert_bulk_adaptive(table, sels, khi_t, klo_t, hi, lo, *, fp_bits: int,
@@ -813,6 +990,20 @@ def insert_bulk_adaptive(table, sels, khi_t, klo_t, hi, lo, *, fp_bits: int,
               n_buckets=n_buckets, valid=valid, evict_rounds=evict_rounds,
               stash=stash, block=block, interpret=interpret, emulate=emulate,
               schedule=schedule)
+
+
+def insert_bulk_adaptive_tm(table, sels, khi_t, klo_t, hi, lo, *,
+                            fp_bits: int, n_buckets=None, valid=None,
+                            evict_rounds: int = DEFAULT_EVICT_ROUNDS,
+                            stash=None, block: int = DEFAULT_BLOCK,
+                            schedule: bool = False, donate: bool = False):
+    """Telemetry twin of ``insert_bulk_adaptive`` — same results plus a
+    ``FilterTelemetry``; own jit, emulation arm (see ``insert_bulk_tm``)."""
+    fn = _insert_adaptive_tm_donated if donate else _insert_adaptive_tm_jit
+    return fn(table, sels, khi_t, klo_t, hi, lo, fp_bits=fp_bits,
+              n_buckets=n_buckets, valid=valid, evict_rounds=evict_rounds,
+              stash=stash, block=block, interpret=False, emulate=True,
+              schedule=schedule, telemetry=True)
 
 
 def insert_once(table: jax.Array, hi: jax.Array, lo: jax.Array, *,

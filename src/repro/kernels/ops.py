@@ -34,15 +34,18 @@ from repro.kernels.delete import delete_bulk, delete_bulk_adaptive
 from repro.kernels.fingerprint import fingerprint_hash, fingerprint_hash_family
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.insert import (DEFAULT_EVICT_ROUNDS, insert_bulk,
-                                  insert_bulk_adaptive, insert_once)
+                                  insert_bulk_adaptive, insert_bulk_adaptive_tm,
+                                  insert_bulk_tm, insert_once)
 from repro.kernels.probe import (probe, probe_adaptive,
-                                 probe_adaptive_emulated, probe_emulated,
-                                 probe_multi)
+                                 probe_adaptive_emulated,
+                                 probe_adaptive_emulated_tm, probe_emulated,
+                                 probe_emulated_tm, probe_multi)
 from repro.kernels.selector import (make_key_planes, make_sel_plane,
                                     report_adapt)
 from repro.kernels.stash import (DEFAULT_STASH_SLOTS, make_stash,
                                  stash_delete_ref, stash_occupancy,
                                  stash_probe_ref, stash_spill_ref)
+from repro.kernels.telemetry import FilterTelemetry, empty_telemetry
 
 # VMEM residency budget for the filter kernels.  The probe/insert/delete
 # BlockSpecs pin the full table per program, and the mutating kernels carry
@@ -305,6 +308,24 @@ def probe_dispatch(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
     return _unpad(hit, n)
 
 
+def probe_dispatch_tm(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
+                      fp_bits: int, n_buckets=None, stash=None):
+    """Telemetry twin of ``probe_dispatch`` -> (hit, FilterTelemetry).
+
+    Runs the gridless emulated probe body (bit-for-bit the kernel's
+    answers — the PR-5 parity contract) plus the probe-depth counter
+    plane.  Separate jit under the hood (``probe_emulated_tm``), so the
+    telemetry-off lookup's dispatch is untouched.
+    """
+    if hi.shape[0] == 0:
+        return jnp.zeros((0,), jnp.bool_), empty_telemetry()
+    if n_buckets is None:
+        n_buckets = table.shape[0]
+    hit, depth = probe_emulated_tm(table, hi, lo, n_buckets, stash,
+                                   fp_bits=fp_bits)
+    return hit, empty_telemetry()._replace(probe_depth=depth)
+
+
 def multi_prober(tables: jax.Array, *, fp_bits: int, n_buckets=None,
                  stashes=None, use_pallas: str = "auto"):
     """Resolve ``filter_lookup_multi``'s dispatch ONCE for a fixed
@@ -475,6 +496,99 @@ def filter_delete(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
     return new_table, stash, ok | cleared
 
 
+def filter_insert_tm(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
+                     fp_bits: int, n_buckets=None, valid=None,
+                     evict_rounds: int = 0, stash=None,
+                     schedule: bool = False, donate: bool = False):
+    """Telemetry twin of ``filter_insert`` (kernel arm pinned) -> the same
+    results plus a ``FilterTelemetry`` with the kick-depth histogram,
+    spill/rollback counts, and stash fill high-water.
+
+    Padding lanes ride ``valid=False`` and are excluded from every counter
+    (the histogram masks on ``valid``), so the counters describe exactly
+    the caller's batch.
+    """
+    if hi.shape[0] == 0:
+        empty_ok = jnp.zeros((0,), jnp.bool_)
+        tm = empty_telemetry()
+        return ((table, empty_ok, tm) if stash is None
+                else (table, stash, empty_ok, tm))
+    if valid is None:
+        valid = jnp.ones(hi.shape, bool)
+    stash_slots = 0 if stash is None else stash.shape[1]
+    block = min(autotune_block("insert", table_bytes=table.size * 4,
+                               evict_rounds=evict_rounds,
+                               stash_slots=stash_slots,
+                               n_keys=hi.shape[0]), hi.shape[0])
+    hi_p, n = _pad_to(hi, block)
+    lo_p, _ = _pad_to(lo, block)
+    valid_p, _ = _pad_to(valid, block)   # pads False: never touches the table
+    if stash is None:
+        new_table, ok, tm = insert_bulk_tm(
+            table, hi_p, lo_p, fp_bits=fp_bits, n_buckets=n_buckets,
+            valid=valid_p, evict_rounds=evict_rounds, block=block,
+            schedule=schedule, donate=donate)
+        return new_table, _unpad(ok, n), tm
+    new_table, new_stash, ok, tm = insert_bulk_tm(
+        table, hi_p, lo_p, fp_bits=fp_bits, n_buckets=n_buckets,
+        valid=valid_p, evict_rounds=evict_rounds, stash=stash, block=block,
+        schedule=schedule, donate=donate)
+    return new_table, new_stash, _unpad(ok, n), tm
+
+
+def filter_delete_tm(table: jax.Array, hi: jax.Array, lo: jax.Array, *,
+                     fp_bits: int, n_buckets=None, valid=None, stash=None,
+                     donate: bool = False):
+    """Telemetry twin of ``filter_delete`` -> the same results plus a
+    ``FilterTelemetry`` counting table- vs stash-resolved deletes.
+
+    The delete kernels already return everything the counters need, so
+    this twin is pure ops-level assembly — same kernel calls, two extra
+    reductions.
+    """
+    if hi.shape[0] == 0:
+        empty_ok = jnp.zeros((0,), jnp.bool_)
+        tm = empty_telemetry()
+        return ((table, empty_ok, tm) if stash is None
+                else (table, stash, empty_ok, tm))
+    if valid is None:
+        valid = jnp.ones(hi.shape, bool)
+    block = min(autotune_block("delete", table_bytes=table.size * 4,
+                               n_keys=hi.shape[0]), hi.shape[0])
+    hi_p, n = _pad_to(hi, block)
+    lo_p, _ = _pad_to(lo, block)
+    valid_p, _ = _pad_to(valid, block)   # pads False: never touches table
+    new_table, ok = delete_bulk(table, hi_p, lo_p, fp_bits=fp_bits,
+                                n_buckets=n_buckets, valid=valid_p,
+                                block=block, interpret=not _on_tpu(),
+                                emulate=_emulate(), donate=donate)
+    ok = _unpad(ok, n)
+    if stash is None:
+        return new_table, ok, _delete_tm_plane(ok)
+    nb = table.shape[0] if n_buckets is None else n_buckets
+    stash, cleared = stash_delete_ref(stash, hi, lo, valid & ~ok,
+                                      fp_bits=fp_bits, n_buckets=nb)
+    return (new_table, stash, ok | cleared,
+            _delete_tm_plane_stash(ok, cleared, stash))
+
+
+@jax.jit
+def _delete_tm_plane(ok):
+    """Counter plane of a stashless delete in ONE fused dispatch — the
+    loose ``jnp.sum``/``astype`` calls this replaces each paid a separate
+    CPU dispatch, together several times the delete kernel's own cost."""
+    return empty_telemetry()._replace(
+        table_deletes=jnp.sum(ok).astype(jnp.uint32))
+
+
+@jax.jit
+def _delete_tm_plane_stash(ok, cleared, stash):
+    return empty_telemetry()._replace(
+        table_deletes=jnp.sum(ok).astype(jnp.uint32),
+        stash_deletes=jnp.sum(cleared).astype(jnp.uint32),
+        stash_fill_hw=stash_occupancy(stash).astype(jnp.uint32))
+
+
 # ------------------------------------------------- adaptive dispatch -------
 #
 # The adaptive filter's state is FOUR planes (fingerprint table + packed
@@ -633,6 +747,99 @@ def adaptive_report(table: jax.Array, sels: jax.Array, khi_t: jax.Array,
                         n_buckets=n_buckets)
 
 
+def adaptive_lookup_tm(table: jax.Array, sels: jax.Array, hi: jax.Array,
+                       lo: jax.Array, *, fp_bits: int, n_buckets=None,
+                       stash=None):
+    """Telemetry twin of ``adaptive_lookup`` -> (hit, FilterTelemetry)."""
+    if hi.shape[0] == 0:
+        return jnp.zeros((0,), jnp.bool_), empty_telemetry()
+    if n_buckets is None:
+        n_buckets = table.shape[0]
+    hit, depth = probe_adaptive_emulated_tm(
+        table, sels, hi.astype(jnp.uint32), lo.astype(jnp.uint32), n_buckets,
+        stash, fp_bits=fp_bits)
+    return hit, empty_telemetry()._replace(probe_depth=depth)
+
+
+def adaptive_insert_tm(table: jax.Array, sels: jax.Array, khi_t: jax.Array,
+                       klo_t: jax.Array, hi: jax.Array, lo: jax.Array, *,
+                       fp_bits: int, n_buckets=None, valid=None,
+                       evict_rounds: int = 0, stash=None,
+                       schedule: bool = False, donate: bool = False):
+    """Telemetry twin of ``adaptive_insert`` -> same results + telemetry."""
+    if hi.shape[0] == 0:
+        empty_ok = jnp.zeros((0,), jnp.bool_)
+        tm = empty_telemetry()
+        return ((table, sels, khi_t, klo_t, empty_ok, tm) if stash is None
+                else (table, sels, khi_t, klo_t, stash, empty_ok, tm))
+    if valid is None:
+        valid = jnp.ones(hi.shape, bool)
+    table_bytes = _adaptive_plane_bytes(table)
+    stash_slots = 0 if stash is None else stash.shape[1]
+    block = min(autotune_block("insert", table_bytes=table_bytes,
+                               evict_rounds=2 * evict_rounds,
+                               stash_slots=stash_slots,
+                               n_keys=hi.shape[0]), hi.shape[0])
+    hi_p, n = _pad_to(hi, block)
+    lo_p, _ = _pad_to(lo, block)
+    valid_p, _ = _pad_to(valid, block)   # pads False: never touches planes
+    out = insert_bulk_adaptive_tm(table, sels, khi_t, klo_t, hi_p, lo_p,
+                                  fp_bits=fp_bits, n_buckets=n_buckets,
+                                  valid=valid_p, evict_rounds=evict_rounds,
+                                  stash=stash, block=block,
+                                  schedule=schedule, donate=donate)
+    tm = out[-1]
+    return (*out[:-2], _unpad(out[-2], n), tm)
+
+
+def adaptive_delete_tm(table: jax.Array, sels: jax.Array, khi_t: jax.Array,
+                       klo_t: jax.Array, hi: jax.Array, lo: jax.Array, *,
+                       fp_bits: int, n_buckets=None, valid=None, stash=None,
+                       donate: bool = False):
+    """Telemetry twin of ``adaptive_delete`` -> same results + telemetry."""
+    if hi.shape[0] == 0:
+        empty_ok = jnp.zeros((0,), jnp.bool_)
+        tm = empty_telemetry()
+        return ((table, sels, khi_t, klo_t, empty_ok, tm) if stash is None
+                else (table, sels, khi_t, klo_t, stash, empty_ok, tm))
+    if valid is None:
+        valid = jnp.ones(hi.shape, bool)
+    table_bytes = _adaptive_plane_bytes(table)
+    block = min(autotune_block("delete", table_bytes=table_bytes,
+                               n_keys=hi.shape[0]), hi.shape[0])
+    hi_p, n = _pad_to(hi, block)
+    lo_p, _ = _pad_to(lo, block)
+    valid_p, _ = _pad_to(valid, block)   # pads False: never touches planes
+    table, sels, khi_t, klo_t, ok = delete_bulk_adaptive(
+        table, sels, khi_t, klo_t, hi_p, lo_p, fp_bits=fp_bits,
+        n_buckets=n_buckets, valid=valid_p, block=block,
+        interpret=not _on_tpu(), emulate=True, donate=donate)
+    ok = _unpad(ok, n)
+    tm = empty_telemetry()._replace(
+        table_deletes=jnp.sum(ok).astype(jnp.uint32))
+    if stash is None:
+        return table, sels, khi_t, klo_t, ok, tm
+    nb = table.shape[0] if n_buckets is None else n_buckets
+    stash, cleared = stash_delete_ref(stash, hi, lo, valid & ~ok,
+                                      fp_bits=fp_bits, n_buckets=nb)
+    tm = tm._replace(stash_deletes=jnp.sum(cleared).astype(jnp.uint32),
+                     stash_fill_hw=stash_occupancy(stash).astype(jnp.uint32))
+    return table, sels, khi_t, klo_t, stash, ok | cleared, tm
+
+
+def adaptive_report_tm(table: jax.Array, sels: jax.Array, khi_t: jax.Array,
+                       klo_t: jax.Array, hi: jax.Array, lo: jax.Array, *,
+                       fp_bits: int, n_buckets, valid=None):
+    """Telemetry twin of ``adaptive_report`` — ``selector_bumps`` counts
+    the slots whose selector actually advanced this pass."""
+    table, sels, adapted, resident = adaptive_report(
+        table, sels, khi_t, klo_t, hi, lo, fp_bits=fp_bits,
+        n_buckets=n_buckets, valid=valid)
+    tm = empty_telemetry()._replace(
+        selector_bumps=jnp.sum(adapted).astype(jnp.uint32))
+    return table, sels, adapted, resident, tm
+
+
 def attention(q, k, v, *, causal: bool = True, window: int | None = None,
               logit_softcap: float | None = None, scale: float | None = None,
               qpos_start=None, valid_len=None, key_positions=None,
@@ -668,4 +875,7 @@ __all__ = ["hash_keys", "filter_lookup", "filter_lookup_multi",
            "DEFAULT_EVICT_ROUNDS", "DEFAULT_STASH_SLOTS", "make_stash",
            "stash_occupancy", "adaptive_lookup", "adaptive_insert",
            "adaptive_delete", "adaptive_report", "make_sel_plane",
-           "make_key_planes"]
+           "make_key_planes", "FilterTelemetry", "empty_telemetry",
+           "probe_dispatch_tm", "filter_insert_tm", "filter_delete_tm",
+           "adaptive_lookup_tm", "adaptive_insert_tm", "adaptive_delete_tm",
+           "adaptive_report_tm"]

@@ -34,12 +34,13 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core import hashing
 from repro.kernels.selector import fp_family, select_fp, sel_unpack
 from repro.kernels.stash import stash_match
+from repro.kernels.telemetry import probe_depth_counts
 
 DEFAULT_BLOCK = 1024
 
 
 def _probe_body(table_ref, stash, hi, lo, n_buckets, *, fp_bits: int,
-                array_table: bool = False):
+                array_table: bool = False, want_stats: bool = False):
     fp = hashing.fingerprint(hi, lo, fp_bits)
     i1 = hashing.index_hash_dyn(hi, lo, n_buckets)
     i2 = hashing.alt_index_dyn(i1, fp, n_buckets)
@@ -57,9 +58,18 @@ def _probe_body(table_ref, stash, hi, lo, n_buckets, *, fp_bits: int,
         # Pallas ref gather: Mosaic wants int32 indices.
         b1 = table_ref[i1.astype(jnp.int32), :]
         b2 = table_ref[i2.astype(jnp.int32), :]
-    hit = jnp.any(b1 == fp[:, None], axis=-1) | jnp.any(b2 == fp[:, None], axis=-1)
+    h1 = jnp.any(b1 == fp[:, None], axis=-1)
+    h2 = jnp.any(b2 == fp[:, None], axis=-1)
+    hit = h1 | h2
+    hs = None
     if stash is not None:
-        hit = hit | stash_match(stash, fp, i1, i2)
+        hs = stash_match(stash, fp, i1, i2)
+        hit = hit | hs
+    if want_stats:
+        # Per-bucket hit components for the probe-depth telemetry plane.
+        if hs is None:
+            hs = jnp.zeros_like(hit)
+        return hit, (h1, h2, hs)
     return hit
 
 
@@ -142,11 +152,28 @@ def probe_emulated(table: jax.Array, hi: jax.Array, lo: jax.Array,
                        array_table=True)
 
 
+@functools.partial(jax.jit, static_argnames=("fp_bits",))
+def probe_emulated_tm(table: jax.Array, hi: jax.Array, lo: jax.Array,
+                      n_buckets, stash, *, fp_bits: int):
+    """Telemetry twin of ``probe_emulated`` -> (hit, probe_depth uint32[4]).
+
+    ``probe_depth`` counts lanes by shallowest hit location — first bucket,
+    second bucket, stash, miss (``kernels.telemetry.probe_depth_counts``).
+    Its own jit: the telemetry-off lookup keeps its cache and dispatch.
+    """
+    hit, (h1, h2, hs) = _probe_body(table, stash, hi, lo, n_buckets,
+                                    fp_bits=fp_bits, array_table=True,
+                                    want_stats=True)
+    valid = jnp.ones_like(hit)
+    return hit, probe_depth_counts(h1, h2, hs, valid)
+
+
 # --------------------------------------------- selector-aware probe ---------
 
 
 def _probe_adaptive_body(table_ref, sel_ref, stash, hi, lo, n_buckets, *,
-                         fp_bits: int, array_table: bool = False):
+                         fp_bits: int, array_table: bool = False,
+                         want_stats: bool = False):
     """Adaptive lookup: compare each slot against the fingerprint the slot's
     selector chose (``kernels/selector.py``).
 
@@ -174,9 +201,17 @@ def _probe_adaptive_body(table_ref, sel_ref, stash, hi, lo, n_buckets, *,
         s2 = sel_ref[i2.astype(jnp.int32), :]
     e1 = select_fp(fam, sel_unpack(s1, bucket_size))
     e2 = select_fp(fam, sel_unpack(s2, bucket_size))
-    hit = jnp.any(b1 == e1, axis=-1) | jnp.any(b2 == e2, axis=-1)
+    h1 = jnp.any(b1 == e1, axis=-1)
+    h2 = jnp.any(b2 == e2, axis=-1)
+    hit = h1 | h2
+    hs = None
     if stash is not None:
-        hit = hit | stash_match(stash, fp0, i1, i2)
+        hs = stash_match(stash, fp0, i1, i2)
+        hit = hit | hs
+    if want_stats:
+        if hs is None:
+            hs = jnp.zeros_like(hit)
+        return hit, (h1, h2, hs)
     return hit
 
 
@@ -255,6 +290,18 @@ def probe_adaptive_emulated(table: jax.Array, sels: jax.Array, hi: jax.Array,
     adaptive serving lookup's analogue of ``probe_emulated``)."""
     return _probe_adaptive_body(table, sels, stash, hi, lo, n_buckets,
                                 fp_bits=fp_bits, array_table=True)
+
+
+@functools.partial(jax.jit, static_argnames=("fp_bits",))
+def probe_adaptive_emulated_tm(table: jax.Array, sels: jax.Array,
+                               hi: jax.Array, lo: jax.Array, n_buckets,
+                               stash, *, fp_bits: int):
+    """Telemetry twin of ``probe_adaptive_emulated`` -> (hit, depth[4])."""
+    hit, (h1, h2, hs) = _probe_adaptive_body(
+        table, sels, stash, hi, lo, n_buckets, fp_bits=fp_bits,
+        array_table=True, want_stats=True)
+    valid = jnp.ones_like(hit)
+    return hit, probe_depth_counts(h1, h2, hs, valid)
 
 
 # ----------------------------------------------- multi-generation probe ----

@@ -1,0 +1,15 @@
+"""Observability: host metrics registry + trace spans.
+
+Device counter planes live beside the kernels in
+``repro.kernels.telemetry``; this package is the host half — the
+label-carrying metrics registry (JSONL / Prometheus export) and the
+Chrome-trace span recorder.  Everything here is optional-by-default:
+components accept ``metrics=None`` / ``tracer=None`` and do no
+observability work unless handed one.
+"""
+from repro.obs.registry import (Counter, Gauge, Histogram, MetricsRegistry,
+                                RingBuffer)
+from repro.obs.trace import TraceRecorder
+
+__all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry",
+           "RingBuffer", "TraceRecorder"]

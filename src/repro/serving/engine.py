@@ -44,6 +44,92 @@ def greedy_sample(logits):
     return jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
 
 
+# ------------------------------------------------- backpressure policy --
+#
+# The SLO follow-on: the admission arm's congestion evidence — shed load,
+# deferred insert waves, and the hysteresis gate's signal — now lives in
+# the metrics registry (``repro.obs``), so the serving engine can make its
+# backpressure decision from the SAME numbers the report surfaces, instead
+# of re-deriving them from scheduler internals.
+
+
+@dataclasses.dataclass(frozen=True)
+class BackpressureConfig:
+    """Thresholds over the registry's admission metrics.
+
+    ``defer_signal`` / ``resume_signal`` form the hysteresis band over the
+    ``admission_signal`` gauge (the same congestion scalar the filter-side
+    ``AdmissionController`` trips on); fresh ``filter_shed_ops`` escalate
+    straight to shedding — load the filter already gave up on must not be
+    re-offered as decode work.
+    """
+
+    defer_signal: float = 0.85
+    resume_signal: float = 0.60
+
+
+class BackpressureController:
+    """Three-state admit/defer/shed decision over a metrics registry.
+
+    Reads (never writes) the congestion metrics the filter stack publishes:
+
+    * ``admission_signal`` / ``admission_peak_signal`` gauges — live and
+      worst-case congestion from the hysteresis gate;
+    * ``filter_deferred_waves`` counter — insert waves the gate parked;
+    * ``filter_shed_ops`` counter — lanes still parked when a drain gave
+      up (genuine shed load).
+
+    ``decide()`` is the engine-side transition function:
+
+      admit --(deferred waves grow OR signal >= defer_signal)--> defer
+      any   --(fresh shed ops)-----------------------------------> shed
+      defer/shed --(signal <= resume_signal, no new evidence)----> admit
+
+    Counter *deltas* (not absolutes) drive the transitions, so a
+    controller attached mid-run does not re-punish historical congestion.
+    """
+
+    def __init__(self, metrics, config: Optional[BackpressureConfig] = None):
+        self.metrics = metrics
+        self.config = config or BackpressureConfig()
+        self.state = "admit"
+        self._last = {"filter_shed_ops": self._read("filter_shed_ops"),
+                      "filter_deferred_waves":
+                          self._read("filter_deferred_waves")}
+
+    def _read(self, name: str) -> float:
+        return float(self.metrics.counter(name).value())
+
+    def _delta(self, name: str) -> float:
+        cur = self._read(name)
+        d = cur - self._last[name]
+        self._last[name] = cur
+        return d
+
+    @property
+    def peak_signal(self) -> float:
+        return float(self.metrics.gauge("admission_peak_signal").value())
+
+    def decide(self) -> str:
+        """One backpressure decision -> 'admit' | 'defer' | 'shed'."""
+        cfg = self.config
+        sig = float(self.metrics.gauge("admission_signal").value())
+        shed = self._delta("filter_shed_ops")
+        deferred = self._delta("filter_deferred_waves")
+        if shed > 0:
+            self.state = "shed"
+        elif self.state == "shed":
+            if sig <= cfg.resume_signal and deferred == 0:
+                self.state = "admit"
+        elif deferred > 0 or sig >= cfg.defer_signal:
+            self.state = "defer"
+        elif self.state == "defer" and sig <= cfg.resume_signal:
+            self.state = "admit"
+        self.metrics.counter("backpressure_decisions").inc(
+            decision=self.state)
+        return self.state
+
+
 @dataclasses.dataclass
 class GenerationResult:
     tokens: Any

@@ -21,6 +21,7 @@ load *before* it turns into decode-slot starvation.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import os
 import time
@@ -35,6 +36,7 @@ from repro.core import filter as jfilter
 from repro.core import hashing
 from repro.core.scheduling import dedupe_keys
 from repro.kernels import ops as kops
+from repro.kernels.telemetry import KICK_EDGES
 from repro.serving.engine import greedy_sample, make_decode_step, \
     make_prefill_step
 from repro.serving.kvcache import PrefixCacheIndex
@@ -59,6 +61,7 @@ class SchedStats:
     prefix_blocks_reused: int = 0
     wasted_slot_steps: int = 0    # decode steps with idle slots (burst gaps)
     deferred: int = 0             # requests parked by admission control
+    shed_requests: int = 0        # requests dropped by backpressure policy
 
 
 class ContinuousBatcher:
@@ -73,12 +76,15 @@ class ContinuousBatcher:
     def __init__(self, model, params, *, slots: int = 4, cache_len: int = 512,
                  block: int = 32, dtype=jnp.float32,
                  sample_fn: Optional[Callable] = None, index=None,
-                 admission=None):
+                 admission=None, backpressure=None):
         """``index``: any PrefixCacheIndex-duck (e.g. the streaming
         ``GenerationalPrefixIndex``); defaults to the OCF-backed one.
         ``admission``: optional ``streaming.AdmissionController`` — when its
         congestion signal trips, ``submit`` parks requests in ``deferred``
-        until the signal recedes."""
+        until the signal recedes.  ``backpressure``: optional
+        ``engine.BackpressureController`` — a registry-fed admit/defer/shed
+        policy consulted BEFORE the filter-side gate; ``shed`` drops the
+        request outright (counted in ``stats.shed_requests``)."""
         self.model = model
         self.params = params
         self.slots = slots
@@ -86,6 +92,7 @@ class ContinuousBatcher:
         self.index = index if index is not None else PrefixCacheIndex(
             block=block)
         self.admission = admission
+        self.backpressure = backpressure
         self.queue: deque[Request] = deque()
         self.deferred: deque[Request] = deque()
         self.active: dict[int, Request] = {}
@@ -102,7 +109,17 @@ class ContinuousBatcher:
 
     def submit(self, req: Request) -> bool:
         """Queue a request; returns False when admission control deferred
-        it (it stays in ``deferred`` and re-enters on a later tick)."""
+        it (it stays in ``deferred`` and re-enters on a later tick) or the
+        backpressure policy shed it (dropped — the caller must retry)."""
+        if self.backpressure is not None:
+            decision = self.backpressure.decide()
+            if decision == "shed":
+                self.stats.shed_requests += 1
+                return False
+            if decision == "defer":
+                self.deferred.append(req)
+                self.stats.deferred += 1
+                return False
         if self.admission is not None and not self.admission.admit():
             self.deferred.append(req)
             self.stats.deferred += 1
@@ -166,6 +183,13 @@ class ContinuousBatcher:
         """One scheduler tick; returns number of live requests decoded."""
         if self.admission is not None and self.deferred:
             self._drain_deferred()
+        elif (self.deferred and self.backpressure is not None
+                and self.backpressure.decide() == "admit"):
+            while self.deferred:
+                self.queue.append(self.deferred.popleft())
+                self.stats.admitted += 1
+                self.stats.peak_queue = max(self.stats.peak_queue,
+                                            len(self.queue))
         for slot in range(self.slots):
             if slot not in self.active and self.queue:
                 self._admit_one(slot, self.queue.popleft())
@@ -268,7 +292,7 @@ class DeferredWritePump:
 
     def __init__(self, mesh, axis: str, state, *, fp_bits: int,
                  admission=None, capacity_factor: float = 2.0,
-                 backend: str = "auto", donate: bool = True):
+                 backend: str = "auto", donate: bool = True, metrics=None):
         from repro.core.distributed import distributed_insert
         from repro.streaming.admission import AdmissionController
         self.mesh, self.axis = mesh, axis
@@ -277,9 +301,10 @@ class DeferredWritePump:
         self.capacity_factor = capacity_factor
         self.backend = backend
         self.donate = donate
+        self.metrics = metrics
         self._insert = distributed_insert
         self.admission = admission or AdmissionController(
-            filt=ShardedFilterFills(lambda: self.state))
+            filt=ShardedFilterFills(lambda: self.state), metrics=metrics)
         self.n_shards = mesh.shape[axis]
         self._pend_hi = np.empty((0,), np.uint32)
         self._pend_lo = np.empty((0,), np.uint32)
@@ -297,7 +322,7 @@ class DeferredWritePump:
             hi = np.concatenate([hi, np.zeros(pad, np.uint32)])
             lo = np.concatenate([lo, np.zeros(pad, np.uint32)])
             valid[-pad:] = False
-        self.state, ok, deferred, _ov = self._insert(
+        self.state, ok, deferred, ov = self._insert(
             self.mesh, self.axis, self.state, jnp.asarray(hi),
             jnp.asarray(lo), fp_bits=self.fp_bits,
             capacity_factor=self.capacity_factor, backend=self.backend,
@@ -308,6 +333,13 @@ class DeferredWritePump:
         self.stats.inserted += int(ok.sum())
         self.stats.deferred += int(deferred.sum())
         self.stats.failed += int((valid & ~ok & ~deferred).sum())
+        if self.metrics is not None:
+            # ok/deferred already forced a sync; ov rides the same fence.
+            m = self.metrics
+            m.counter("routing_inserted_lanes").inc(int(ok.sum()))
+            m.counter("routing_deferred_lanes").inc(int(deferred.sum()))
+            m.counter("routing_overflow_lanes").inc(
+                int(np.asarray(ov).sum()))
         return ok, deferred
 
     def submit(self, hi, lo):
@@ -333,11 +365,15 @@ class DeferredWritePump:
             return 0
         if not self.admission.peek():
             self.stats.held_ticks += 1
+            if self.metrics is not None:
+                self.metrics.counter("pump_held_ticks").inc()
             return 0
         hi, lo = self._pend_hi, self._pend_lo
         self._pend_hi = np.empty((0,), np.uint32)
         self._pend_lo = np.empty((0,), np.uint32)
         self.stats.resubmitted += int(hi.size)
+        if self.metrics is not None:
+            self.metrics.counter("pump_resubmitted_lanes").inc(int(hi.size))
         self._attempt(hi, lo)
         return int(hi.size)
 
@@ -376,6 +412,12 @@ class DeferredWritePump:
 # device-call sequence in the identical order, so their results (and the
 # filter state they leave behind) are bit-for-bit equal — the oracle
 # parity tests in tests/test_slo.py pin this.
+
+
+# Wave latency histogram edges (µs) for the metrics registry — spans the
+# sync-path microbench floor through admission-parked closed-loop tails.
+LATENCY_BUCKETS_US = (50.0, 100.0, 200.0, 500.0, 1_000.0, 2_000.0,
+                      5_000.0, 10_000.0, 25_000.0, 50_000.0, 100_000.0)
 
 
 @dataclasses.dataclass
@@ -456,10 +498,29 @@ class FilterOpBatcher:
     def __init__(self, ops, state, *, stash: Optional[jax.Array] = None,
                  wave_slots: int = 512, double_buffer="auto",
                  dedupe_lookups: bool = True, admission=None,
-                 clock: Callable[[], float] = time.perf_counter):
+                 clock: Callable[[], float] = time.perf_counter,
+                 telemetry: bool = False, metrics=None, tracer=None):
+        """Observability kwargs (all default-off; the off path issues the
+        identical device-call sequence as a batcher built without them):
+
+        ``telemetry``: dispatch through the ``FilterOps`` ``*_tm`` twins so
+        every wave also returns a device-computed ``FilterTelemetry``
+        (kick-depth histogram, probe hit-depth, spill/rollback counters);
+        the counters ride ``wave._device`` and materialize in the SAME
+        single ``block_until_ready`` as the results.  ``metrics``: a
+        ``repro.obs.MetricsRegistry`` receiving wave timings + counters
+        (auto-created when ``telemetry`` is on and none is given).
+        ``tracer``: a ``repro.obs.TraceRecorder``; dispatch and harvest
+        get Chrome-trace spans."""
         self.ops = ops
         self.state = state
         self.stash = stash
+        self.telemetry = bool(telemetry)
+        if self.telemetry and metrics is None:
+            from repro.obs import MetricsRegistry
+            metrics = MetricsRegistry()
+        self.metrics = metrics
+        self.tracer = tracer
         self.wave_slots = int(wave_slots)
         if double_buffer == "auto":
             double_buffer = (jax.default_backend() != "cpu"
@@ -474,7 +535,8 @@ class FilterOpBatcher:
             float(jax.device_get(state.count)) / max(1, self.capacity), 0.0)
         if admission is not None and not hasattr(admission, "admit"):
             from repro.streaming.admission import AdmissionController
-            admission = AdmissionController(filt=self, config=admission)
+            admission = AdmissionController(filt=self, config=admission,
+                                            metrics=self.metrics)
         self.admission = admission
         self._inflight: Optional[OpWave] = None
         self._deferred: deque[tuple[OpWave, np.ndarray]] = deque()
@@ -496,6 +558,8 @@ class FilterOpBatcher:
                 and not self.admission.admit()):
             self._deferred.append((wave, keys))
             self.stats.deferred_waves += 1
+            if self.metrics is not None:
+                self.metrics.counter("filter_deferred_waves").inc()
             return wave
         self._launch(wave, keys)
         return wave
@@ -520,12 +584,16 @@ class FilterOpBatcher:
             self._retry_deferred()
             if len(self._deferred) == before:
                 self.stats.held_ticks += 1
+                if self.metrics is not None:
+                    self.metrics.counter("filter_held_ticks").inc()
                 if on_held is None:
                     break
                 on_held(self)
         self.flush()
         shed = sum(keys.size for _, keys in self._deferred)
         self.stats.shed_ops += shed
+        if shed and self.metrics is not None:
+            self.metrics.counter("filter_shed_ops").inc(shed)
         return shed
 
     def fills(self) -> tuple[float, float]:
@@ -544,9 +612,19 @@ class FilterOpBatcher:
             wave, keys = self._deferred.popleft()
             self._launch(wave, keys)
 
+    def _span(self, name: str, **args):
+        """Trace span (or no-op) — host-side only, never a device sync."""
+        if self.tracer is None:
+            return contextlib.nullcontext()
+        return self.tracer.span(name, **args)
+
     def _launch(self, wave: OpWave, keys: np.ndarray) -> None:
         prev = self._inflight
-        self._dispatch(wave, keys)     # overlaps prev's device execution
+        with self._span("wave_dispatch", kind=wave.kind, n=wave.n):
+            if self.telemetry:
+                self._dispatch_tm(wave, keys)
+            else:
+                self._dispatch(wave, keys)  # overlaps prev's device exec
         self._inflight = wave
         if prev is not None:
             self._harvest(prev)
@@ -627,9 +705,78 @@ class FilterOpBatcher:
                if self.stash is not None else jnp.int32(0))
         wave._device = (res, self.state.count, occ)
 
+    def _dispatch_tm(self, wave: OpWave, keys: np.ndarray) -> None:
+        """Telemetry twin of ``_dispatch``: the same wave semantics through
+        the ``FilterOps`` ``*_tm`` entry points.  The per-wave
+        ``FilterTelemetry`` rides ``wave._device`` so the harvest
+        materializes counters and results in the SAME single
+        ``block_until_ready`` — telemetry adds no extra sync points."""
+        hi, lo, valid = self._prepare(wave, keys)
+        ops, state, stash = self.ops, self.state, self.stash
+        if wave.kind == "lookup":
+            if self._adaptive:
+                res, tm = ops.lookup_adaptive_tm(state, hi, lo, stash=stash)
+            elif stash is not None:
+                res, tm = ops.lookup_with_stash_tm(state, stash, hi, lo)
+            else:
+                res, tm = ops.lookup_tm(state, hi, lo)
+        elif wave.kind == "insert":
+            if self._adaptive and stash is not None:
+                self.state, self.stash, res, tm = ops.insert_adaptive_tm(
+                    state, hi, lo, valid=valid, stash=stash)
+            elif self._adaptive:
+                self.state, res, tm = ops.insert_adaptive_tm(
+                    state, hi, lo, valid=valid)
+            elif stash is not None:
+                self.state, self.stash, res, tm = ops.insert_spill_tm(
+                    state, stash, hi, lo, valid=valid)
+            else:
+                self.state, res, tm = ops.insert_tm(state, hi, lo,
+                                                    valid=valid)
+        elif wave.kind == "delete":
+            if self._adaptive:
+                out = ops.delete_adaptive_tm(state, hi, lo, valid=valid,
+                                             stash=stash)
+                if stash is not None:
+                    self.state, self.stash, res, tm = out
+                else:
+                    self.state, res, tm = out
+            elif stash is not None:
+                table, new_stash, res, tm = kops.filter_delete_tm(
+                    state.table, hi, lo, fp_bits=ops.fp_bits,
+                    n_buckets=state.n_buckets, valid=valid, stash=stash)
+                # same count convention as the telemetry-off arm: ok counts
+                # table AND stash clears; count tracks the table
+                stash_cleared = (kops.stash_occupancy(stash)
+                                 - kops.stash_occupancy(new_stash))
+                count = (state.count - jnp.sum(res, dtype=jnp.int32)
+                         + stash_cleared)
+                self.state = jfilter.FilterState(table, count,
+                                                 state.n_buckets)
+                self.stash = new_stash
+            else:
+                self.state, res, tm = ops.delete_tm(state, hi, lo,
+                                                    valid=valid)
+        elif wave.kind == "report":
+            if not self._adaptive:
+                raise ValueError("'report' waves need an AdaptiveState")
+            self.state, adapted, _resident, tm = \
+                ops.report_false_positive_tm(state, hi, lo, valid=valid)
+            res = adapted
+        else:
+            raise ValueError(f"unknown wave kind {wave.kind!r}")
+        occ = (kops.stash_occupancy(self.stash)
+               if self.stash is not None else jnp.int32(0))
+        wave._device = (res, self.state.count, occ, tm)
+
     def _harvest(self, wave: OpWave) -> None:
         """The ONLY sync point: materialize one wave's device refs."""
-        res, count, occ = jax.block_until_ready(wave._device)
+        with self._span("wave_harvest", kind=wave.kind, n=wave.n):
+            dev = jax.block_until_ready(wave._device)
+        if len(dev) == 4:
+            res, count, occ, tm = dev
+        else:
+            (res, count, occ), tm = dev, None
         out = np.asarray(res)[:wave._n_probe]
         wave.results = out[wave._inverse] if wave._inverse is not None \
             else out
@@ -641,3 +788,45 @@ class FilterOpBatcher:
         self.stats.harvests += 1
         if wave is self._inflight:
             self._inflight = None
+        if self.metrics is not None:
+            self._record_wave(wave, tm)
+
+    # ------------------------------------------------------ observability --
+
+    def _record_wave(self, wave: OpWave, tm) -> None:
+        """Fold one harvested wave into the metrics registry.  ``tm`` is a
+        ``FilterTelemetry`` (already materialized) or None when the batcher
+        runs host metrics without device counter planes."""
+        m = self.metrics
+        m.counter("filter_waves").inc(kind=wave.kind)
+        m.counter("filter_wave_ops").inc(wave.n, kind=wave.kind)
+        m.histogram("filter_wave_latency_us",
+                    buckets=LATENCY_BUCKETS_US).observe(wave.latency_us,
+                                                        kind=wave.kind)
+        m.record_wave({"kind": wave.kind, "n": wave.n,
+                       "latency_us": wave.latency_us,
+                       "deferred_ticks": wave.deferred_ticks})
+        if tm is None:
+            return
+        # One bulk device->host pull for the whole counter plane — the
+        # per-field int()/asarray conversions each pay a jax->numpy hop,
+        # which at wave rate was the biggest slice of telemetry overhead.
+        tm = type(tm)(*jax.device_get(tuple(tm)))
+        if wave.kind == "insert":
+            m.histogram("filter_kick_depth",
+                        buckets=KICK_EDGES).observe_counts(
+                [int(c) for c in tm.kick_hist])
+        for depth, cnt in zip(("b1", "b2", "stash", "miss"),
+                              tm.probe_depth):
+            if cnt:
+                m.counter("filter_probe_depth").inc(int(cnt), depth=depth)
+        for name, val in (("filter_stash_spills", tm.stash_spills),
+                          ("filter_rollback_lanes", tm.rollback_lanes),
+                          ("filter_selector_bumps", tm.selector_bumps),
+                          ("filter_overflow_lanes", tm.overflow_lanes),
+                          ("filter_table_deletes", tm.table_deletes),
+                          ("filter_stash_deletes", tm.stash_deletes)):
+            v = int(val)
+            if v:
+                m.counter(name).inc(v)
+        m.gauge("filter_stash_fill_hw").set_max(int(tm.stash_fill_hw))

@@ -29,6 +29,7 @@ starts the clock.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Callable, Iterable, Optional
@@ -43,7 +44,8 @@ from repro.serving.scheduler import FilterOpBatcher, OpWave
 from repro.serving.workloads import OpBatch, scenario_stream
 
 __all__ = ["LatencyRecorder", "SloHarness", "SloReport", "run_scenario",
-           "bench_scenarios", "BENCH_SCENARIOS", "PERCENTILES"]
+           "run_scenario_telemetry", "bench_scenarios", "BENCH_SCENARIOS",
+           "PERCENTILES"]
 
 PERCENTILES = (("p50", 50.0), ("p99", 99.0), ("p999", 99.9))
 
@@ -139,10 +141,22 @@ class SloReport:
 
 
 class SloHarness:
-    """Closed-loop scenario driver over a submit path or generation ring."""
+    """Closed-loop scenario driver over a submit path or generation ring.
 
-    def __init__(self, *, clock: Callable[[], float] = time.perf_counter):
+    ``tracer``: optional ``repro.obs.TraceRecorder`` — each replay gets a
+    scenario-level span (wave/harvest spans come from the batcher's own
+    tracer; wire the same recorder into both for one coherent timeline).
+    """
+
+    def __init__(self, *, clock: Callable[[], float] = time.perf_counter,
+                 tracer=None):
         self._clock = clock
+        self.tracer = tracer
+
+    def _span(self, name: str, **args):
+        if self.tracer is None:
+            return contextlib.nullcontext()
+        return self.tracer.span(name, **args)
 
     # ------------------------------------------------------ wave stacks --
 
@@ -168,22 +182,23 @@ class SloHarness:
         reported = 0
         burst_t0 = None
         t0 = self._clock()
-        for batch in stream:
-            if not batch.burst:
-                burst_t0 = None
-            elif burst_t0 is None:
-                burst_t0 = self._clock()   # the whole train arrives now
-            wave = batcher.submit(batch.kind, batch.keys)
-            if burst_t0 is not None:
-                wave.submit_s = burst_t0
-            seen.append((wave, batch.burst))
-            if batch.feedback:
-                batcher.flush()
-                hits = batch.keys[wave.results]
-                if hits.size:
-                    seen.append((batcher.submit("report", hits), False))
-                    reported += int(hits.size)
-        batcher.drain(on_held=on_held)
+        with self._span("scenario", scenario=scenario):
+            for batch in stream:
+                if not batch.burst:
+                    burst_t0 = None
+                elif burst_t0 is None:
+                    burst_t0 = self._clock()  # the whole train arrives now
+                wave = batcher.submit(batch.kind, batch.keys)
+                if burst_t0 is not None:
+                    wave.submit_s = burst_t0
+                seen.append((wave, batch.burst))
+                if batch.feedback:
+                    batcher.flush()
+                    hits = batch.keys[wave.results]
+                    if hits.size:
+                        seen.append((batcher.submit("report", hits), False))
+                        reported += int(hits.size)
+            batcher.drain(on_held=on_held)
         wall = self._clock() - t0
         for wave, burst in seen:
             if wave.done_s:        # shed waves never materialized
@@ -271,7 +286,8 @@ _BUCKET_SIZE = 4
 def make_batcher(scenario: str, *, backend: str = "pallas",
                  wave_slots: int = 512, double_buffer="auto",
                  admission=None, n_buckets: Optional[int] = None,
-                 stash_slots: Optional[int] = None) -> FilterOpBatcher:
+                 stash_slots: Optional[int] = None, telemetry: bool = False,
+                 metrics=None, tracer=None) -> FilterOpBatcher:
     """Fresh scenario-sized stack -> its ``FilterOpBatcher``."""
     if scenario in _ADAPTIVE_STACKS:
         cfg = dict(_ADAPTIVE_STACKS[scenario])
@@ -289,7 +305,9 @@ def make_batcher(scenario: str, *, backend: str = "pallas",
         else cfg.get("stash_slots", 128)
     stash = kops.make_stash(slots) if slots else None
     return FilterOpBatcher(ops, state, stash=stash, wave_slots=wave_slots,
-                           double_buffer=double_buffer, admission=admission)
+                           double_buffer=double_buffer, admission=admission,
+                           telemetry=telemetry, metrics=metrics,
+                           tracer=tracer)
 
 
 def _warm_batcher(proto: FilterOpBatcher, kinds: Iterable[str]) -> None:
@@ -306,7 +324,8 @@ def _warm_batcher(proto: FilterOpBatcher, kinds: Iterable[str]) -> None:
     clone = FilterOpBatcher(proto.ops, state, stash=stash,
                             wave_slots=proto.wave_slots,
                             double_buffer=proto.double_buffer,
-                            dedupe_lookups=proto.dedupe_lookups)
+                            dedupe_lookups=proto.dedupe_lookups,
+                            telemetry=proto.telemetry)
     keys = np.arange(1, proto.wave_slots + 1, dtype=np.uint64)
     for kind in ("insert", "lookup", "delete", "report"):
         if kind in kinds:
@@ -331,17 +350,22 @@ def run_scenario(name: str, *, seed: int = 0, backend: str = "pallas",
                  double_buffer="auto", admission=None,
                  warmup: bool = True, wave_slots: int = 512,
                  stream_kwargs: Optional[dict] = None,
-                 harness: Optional[SloHarness] = None) -> SloReport:
+                 harness: Optional[SloHarness] = None,
+                 telemetry: bool = False, metrics=None, tracer=None,
+                 stack_kwargs: Optional[dict] = None) -> SloReport:
     """Run one scenario end to end -> its ``SloReport``.
 
     Everything downstream of (``name``, ``seed``, ``backend``,
     ``double_buffer``) is deterministic; the sync/async parity test and
-    the committed bench rows both lean on that.
+    the committed bench rows both lean on that.  ``telemetry`` routes the
+    waves through the device counter planes (answers unchanged — the twin
+    jits are parity-pinned); ``metrics``/``tracer`` receive the counters
+    and spans.
     """
     stream = scenario_stream(name, seed,
                              wave_slots=wave_slots,
                              **(stream_kwargs or {}))
-    harness = harness or SloHarness()
+    harness = harness or SloHarness(tracer=tracer)
     if name == "ttl_churn":
         from repro.streaming.generations import (GenerationalFilter,
                                                  GenerationConfig)
@@ -352,15 +376,64 @@ def run_scenario(name: str, *, seed: int = 0, backend: str = "pallas",
         # now=0.0 pins the ring to the stream's logical clock domain —
         # the epoch the waves' ``advance`` deltas accumulate from.
         return harness.run_generational(
-            GenerationalFilter(config=cfg, now=0.0), stream, scenario=name)
+            GenerationalFilter(config=cfg, now=0.0, metrics=metrics),
+            stream, scenario=name)
     batcher = make_batcher(name, backend=backend, wave_slots=wave_slots,
-                           double_buffer=double_buffer, admission=admission)
+                           double_buffer=double_buffer, admission=admission,
+                           telemetry=telemetry, metrics=metrics,
+                           tracer=tracer, **(stack_kwargs or {}))
     if warmup:
         kinds = {b.kind for b in stream}
         if any(b.feedback for b in stream):
             kinds.add("report")
         _warm_batcher(batcher, kinds)
     return harness.run(batcher, stream, scenario=name)
+
+
+def run_scenario_telemetry(name: str, out_dir: str = ".", *, seed: int = 0,
+                           backend: str = "pallas", double_buffer="auto",
+                           admission=None) -> tuple[SloReport, dict]:
+    """The harness's ``--telemetry`` mode: one scenario with counter
+    planes + spans on, exported to files.
+
+    Returns ``(report, paths)`` where ``paths`` names the two artifacts:
+
+    * ``slo_<name>_metrics.jsonl``   — full registry snapshot (kick-depth
+      histogram, stash high-water, probe depths, admission transitions,
+      wave timings + ring records), one JSON object per line;
+    * ``slo_<name>_trace.json``      — Chrome trace-event JSON; load in
+      ``ui.perfetto.dev`` (or chrome://tracing) to see dispatch/harvest
+      overlap per wave.
+    """
+    import os
+
+    from repro.obs import MetricsRegistry, TraceRecorder
+    metrics = MetricsRegistry()
+    tracer = TraceRecorder(process_name=f"slo:{name}")
+    stack_kwargs = None
+    if name == "burst_train" and admission is None:
+        # Default the burst replay to the bench's tuned admission arm
+        # (small stack + hysteresis band the bursts actually cross), so
+        # the exported snapshot carries trip/readmit transitions alongside
+        # the kernel counters — the scenario the telemetry mode exists to
+        # make visible.
+        from repro.streaming.admission import AdmissionConfig
+        admission = AdmissionConfig(high_water=0.18, low_water=0.12)
+        stack_kwargs = dict(n_buckets=1024, stash_slots=32)
+        double_buffer = True
+    report = run_scenario(name, seed=seed, backend=backend,
+                          double_buffer=double_buffer, admission=admission,
+                          telemetry=(name != "ttl_churn"), metrics=metrics,
+                          tracer=tracer, stack_kwargs=stack_kwargs)
+    os.makedirs(out_dir, exist_ok=True)
+    paths = {
+        "metrics": os.path.join(out_dir, f"slo_{name}_metrics.jsonl"),
+        "trace": os.path.join(out_dir, f"slo_{name}_trace.json"),
+    }
+    metrics.to_jsonl(paths["metrics"])
+    tracer.save(paths["trace"])
+    report.extras["telemetry_files"] = paths
+    return report, paths
 
 
 def bench_scenarios(seed: int = 0, scenarios=BENCH_SCENARIOS, *,

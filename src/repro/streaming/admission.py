@@ -70,6 +70,9 @@ class AdmissionController:
     deferred: int = 0
     last_signal: float = 0.0
     peak_signal: float = 0.0
+    # Optional repro.obs.MetricsRegistry: trip/readmit transitions become
+    # counters, the congestion reading a pair of gauges.  None = free.
+    metrics: Optional[object] = None
 
     def signal(self) -> float:
         """Current congestion in [0, ~1] (one stacked device read)."""
@@ -77,6 +80,9 @@ class AdmissionController:
         s = congestion_signal(stash_fill, fill, self.config)
         self.last_signal = s
         self.peak_signal = max(self.peak_signal, s)
+        if self.metrics is not None:
+            self.metrics.gauge("admission_signal").set(s)
+            self.metrics.gauge("admission_peak_signal").set_max(s)
         return s
 
     def peek(self) -> bool:
@@ -88,8 +94,12 @@ class AdmissionController:
         if self.tripped:
             if s <= self.config.low_water:
                 self.tripped = False
+                if self.metrics is not None:
+                    self.metrics.counter("admission_readmits").inc()
         elif s >= self.config.high_water:
             self.tripped = True
+            if self.metrics is not None:
+                self.metrics.counter("admission_trips").inc()
         return not self.tripped
 
     def admit(self) -> bool:

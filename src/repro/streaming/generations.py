@@ -166,8 +166,11 @@ class GenerationalFilter:
     """
 
     def __init__(self, config: GenerationConfig | None = None,
-                 now: Optional[float] = None):
+                 now: Optional[float] = None, metrics=None):
+        """``metrics``: optional ``repro.obs.MetricsRegistry`` — rotation /
+        TTL-expiry events become counters; None costs nothing."""
         self.config = config or GenerationConfig()
+        self.metrics = metrics
         self.ops = self.config.make_filter_ops()
         buf = pow2_at_least(self.config.n_buckets)
         self.pool = _BufferPool(self.config.generations, buf,
@@ -209,6 +212,8 @@ class GenerationalFilter:
         self.pool.release(gen.state.table)
         if expired:
             self.stats.expirations += 1
+            if self.metrics is not None:
+                self.metrics.counter("generation_expirations").inc()
 
     @property
     def active(self) -> _Generation:
@@ -274,6 +279,8 @@ class GenerationalFilter:
             self._retire(oldest, expired=False)
         self._spawn(now)
         self.stats.rotations += 1
+        if self.metrics is not None:
+            self.metrics.counter("generation_rotations").inc()
 
     def _control_read(self) -> tuple[int, int]:
         """Active generation's (table count, stash occupancy) in ONE

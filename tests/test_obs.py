@@ -1,0 +1,412 @@
+"""Observability tests — counter-plane parity, registry, spans, policy.
+
+The contracts pinned here:
+
+  * **dispatch identity**: a batcher with telemetry OFF issues exactly
+    the pre-telemetry device-call sequence (never a ``*_tm`` entry
+    point), and its results and final filter state are bit-for-bit those
+    of a batcher built without any observability kwargs at all —
+    attaching a registry or tracer must not change the device work;
+  * **telemetry parity**: turning the counter planes ON changes the
+    counters, never the answers — results, tables, stashes and counts
+    stay bit-identical to the off path, while the registry fills with a
+    kick-depth histogram whose mass equals the insert lanes offered;
+  * **trip -> shed -> readmit**: the registry-fed ``BackpressureController``
+    walks the admit/defer/shed state machine off the same metrics the
+    admission gate publishes, with hysteresis on the way back down;
+  * **vectorized ground truth**: ``measure_false_positives`` /
+    ``measure_false_negatives`` through the batch keystore pass agree
+    with the per-key scalar loop they replaced;
+  * merge associativity of the device telemetry fold (hypothesis,
+    optional dep — not tier-1).
+"""
+import json
+
+import numpy as np
+import pytest
+
+import repro.kernels.ops as kops_mod
+from repro.core import filter as jfilter
+from repro.core.filter_ops import FilterOps
+from repro.core.keystore import VectorKeystore
+from repro.core.metrics import (measure_false_negatives,
+                                measure_false_positives)
+from repro.core.ocf import OCF, OcfConfig
+from repro.kernels import ops as kops
+from repro.obs import MetricsRegistry, TraceRecorder
+from repro.serving.engine import BackpressureConfig, BackpressureController
+from repro.serving.scheduler import FilterOpBatcher
+from repro.streaming.admission import AdmissionConfig, AdmissionController
+
+pytestmark = pytest.mark.obs
+
+WS = 64
+
+# every device entry point the batcher can reach, off and on
+_SPIED = ("probe_dispatch", "filter_insert", "filter_delete",
+          "adaptive_lookup", "adaptive_insert", "adaptive_delete",
+          "adaptive_report", "probe_dispatch_tm", "filter_insert_tm",
+          "filter_delete_tm", "adaptive_lookup_tm", "adaptive_insert_tm",
+          "adaptive_delete_tm", "adaptive_report_tm")
+
+
+def _spy_kops(monkeypatch):
+    """Record the name of every kops entry point the batcher dispatches."""
+    calls = []
+
+    def wrap(name):
+        orig = getattr(kops_mod, name)
+
+        def wrapped(*a, **k):
+            calls.append(name)
+            return orig(*a, **k)
+
+        return wrapped
+
+    for name in _SPIED:
+        monkeypatch.setattr(kops_mod, name, wrap(name))
+    return calls
+
+
+def _mk_batcher(**obs_kwargs):
+    ops = FilterOps(backend="pallas", evict_rounds=16)
+    state = jfilter.make_state(256, buffer_buckets=256)
+    stash = kops.make_stash(16)
+    return FilterOpBatcher(ops, state, stash=stash, wave_slots=WS,
+                           double_buffer=True, **obs_kwargs)
+
+
+def _replay(batcher, rng):
+    results = []
+    for i in range(6):
+        kind = ("insert", "lookup", "delete")[i % 3]
+        keys = rng.randint(1, 2 ** 62, size=WS, dtype=np.int64)
+        wave = batcher.submit(kind, keys.astype(np.uint64))
+        results.append(wave)
+    batcher.flush()
+    return [w.results for w in results]
+
+
+@pytest.mark.tier1
+def test_telemetry_off_dispatch_identical(monkeypatch):
+    """Attaching metrics/tracer with telemetry OFF must not change the
+    device-call sequence or any bit of the results/state."""
+    import jax.numpy as jnp
+
+    calls = _spy_kops(monkeypatch)
+    plain = _mk_batcher()
+    res_plain = _replay(plain, np.random.RandomState(3))
+    seq_plain = list(calls)
+
+    calls.clear()
+    observed = _mk_batcher(metrics=MetricsRegistry(), tracer=TraceRecorder())
+    res_obs = _replay(observed, np.random.RandomState(3))
+    seq_obs = list(calls)
+
+    assert seq_obs == seq_plain
+    assert not any(name.endswith("_tm") for name in seq_obs)
+    for a, b in zip(res_plain, res_obs):
+        np.testing.assert_array_equal(a, b)
+    assert jnp.array_equal(plain.state.table, observed.state.table)
+    assert jnp.array_equal(plain.stash, observed.stash)
+    assert int(plain.state.count) == int(observed.state.count)
+
+
+@pytest.mark.tier1
+def test_telemetry_on_counters_change_answers_dont(monkeypatch):
+    import jax.numpy as jnp
+
+    calls = _spy_kops(monkeypatch)
+    plain = _mk_batcher()
+    res_plain = _replay(plain, np.random.RandomState(5))
+
+    calls.clear()
+    m = MetricsRegistry()
+    on = _mk_batcher(telemetry=True, metrics=m)
+    res_on = _replay(on, np.random.RandomState(5))
+
+    # the telemetry arm dispatches ONLY through the twin entry points
+    assert calls and all(n.endswith("_tm") for n in calls)
+    for a, b in zip(res_plain, res_on):
+        np.testing.assert_array_equal(a, b)
+    assert jnp.array_equal(plain.state.table, on.state.table)
+    assert jnp.array_equal(plain.stash, on.stash)
+    assert int(plain.state.count) == int(on.state.count)
+
+    snap = m.snapshot()
+    kick = snap["filter_kick_depth"]
+    assert sum(kick["counts"]) == 2 * WS  # every insert lane binned once
+    assert 'filter_waves{kind="insert"}' in snap
+    assert any(k.startswith("filter_probe_depth") for k in snap)
+    assert "filter_stash_fill_hw" in snap
+    assert len(m.ring) == 6
+
+
+@pytest.mark.tier1
+def test_adaptive_telemetry_parity():
+    import jax.numpy as jnp
+
+    from repro.adaptive.state import make_adaptive_state
+
+    def mk(**kw):
+        return FilterOpBatcher(FilterOps(backend="pallas", evict_rounds=16),
+                               make_adaptive_state(256),
+                               stash=kops.make_stash(8), wave_slots=WS,
+                               double_buffer=True, **kw)
+
+    rng = np.random.RandomState(11)
+    keys = rng.randint(1, 2 ** 62, size=WS, dtype=np.int64).astype(np.uint64)
+    m = MetricsRegistry()
+    on, off = mk(telemetry=True, metrics=m), mk()
+    for b in (on, off):
+        b.submit("insert", keys)
+        b.submit("lookup", keys)
+        b.submit("report", keys[:16])
+        b.submit("delete", keys[:32])
+        b.flush()
+    assert jnp.array_equal(on.state.table, off.state.table)
+    assert jnp.array_equal(on.state.sels, off.state.sels)
+    assert jnp.array_equal(on.stash, off.stash)
+    assert int(on.state.count) == int(off.state.count)
+    snap = m.snapshot()
+    # every inserted key was present: lookups must all land at some depth
+    depth = sum(v for k, v in snap.items()
+                if k.startswith("filter_probe_depth"))
+    assert depth == WS
+    assert snap.get("filter_table_deletes", 0) + snap.get(
+        "filter_stash_deletes", 0) >= 1
+
+
+@pytest.mark.tier1
+def test_backpressure_trip_shed_readmit_sequence():
+    """The engine's admit -> defer -> shed -> admit walk over registry
+    metrics, exactly as the admission arm publishes them."""
+    m = MetricsRegistry()
+    bp = BackpressureController(m, BackpressureConfig(defer_signal=0.8,
+                                                      resume_signal=0.5))
+    sig = m.gauge("admission_signal")
+
+    sig.set(0.1)
+    assert bp.decide() == "admit"
+    # congestion crosses the defer threshold (the gate trips)
+    sig.set(0.9)
+    m.counter("admission_trips").inc()
+    m.counter("filter_deferred_waves").inc()
+    assert bp.decide() == "defer"
+    # inside the hysteresis band: still deferring, no flap
+    sig.set(0.7)
+    assert bp.decide() == "defer"
+    # a drain gave up -> genuine shed load escalates
+    m.counter("filter_shed_ops").inc(128)
+    assert bp.decide() == "shed"
+    # signal recedes below resume with no new evidence -> readmit
+    sig.set(0.4)
+    m.counter("admission_readmits").inc()
+    assert bp.decide() == "admit"
+    # decisions were themselves recorded
+    snap = m.snapshot()
+    assert snap['backpressure_decisions{decision="shed"}'] == 1
+    assert snap['backpressure_decisions{decision="admit"}'] == 2
+
+
+@pytest.mark.tier1
+def test_backpressure_from_live_admission_metrics():
+    """End to end: a burst through an admission-gated batcher publishes
+    trips/deferred/shed into the registry, and a BackpressureController
+    reading that registry sheds."""
+    m = MetricsRegistry()
+    ops = FilterOps(backend="pallas", evict_rounds=16)
+    state = jfilter.make_state(64, buffer_buckets=64)
+    batcher = FilterOpBatcher(
+        ops, state, stash=kops.make_stash(8), wave_slots=WS,
+        double_buffer=True, metrics=m,
+        admission=AdmissionConfig(high_water=0.3, low_water=0.1))
+    bp = BackpressureController(m)
+    assert bp.decide() == "admit"
+    rng = np.random.RandomState(2)
+    for _ in range(12):  # overload a tiny table: 12 x 64 lanes into 256 slots
+        batcher.submit("insert",
+                       rng.randint(1, 2 ** 62, size=WS,
+                                   dtype=np.int64).astype(np.uint64))
+    batcher.drain()
+    snap = m.snapshot()
+    assert snap.get("filter_deferred_waves", 0) >= 1
+    assert snap.get("filter_shed_ops", 0) >= 1
+    assert snap.get("admission_trips", 0) >= 1
+    assert bp.decide() == "shed"
+
+
+@pytest.mark.tier1
+def test_admission_controller_transition_counters():
+    class Fills:
+        def __init__(self):
+            self.v = (0.0, 0.0)
+
+        def fills(self):
+            return self.v
+
+    m = MetricsRegistry()
+    f = Fills()
+    ctl = AdmissionController(filt=f, config=AdmissionConfig(
+        high_water=0.5, low_water=0.2), metrics=m)
+    assert ctl.peek()
+    f.v = (1.0, 1.0)
+    assert not ctl.peek()          # trip
+    assert not ctl.peek()          # still tripped: no double count
+    f.v = (0.0, 0.0)
+    assert ctl.peek()              # readmit
+    assert m.counter("admission_trips").value() == 1
+    assert m.counter("admission_readmits").value() == 1
+    assert m.gauge("admission_peak_signal").value() == 1.0
+
+
+@pytest.mark.tier1
+def test_measure_fp_fn_match_scalar_loop(rng):
+    ocf = OCF(OcfConfig(capacity=1 << 10, fp_bits=8))
+    inserted = rng.randint(1, 2 ** 62, size=600,
+                           dtype=np.int64).astype(np.uint64)
+    ocf.insert(inserted)
+    probes = rng.randint(1, 2 ** 62, size=2000,
+                         dtype=np.int64).astype(np.uint64)
+    mixed = np.concatenate([probes, inserted[:100]])
+
+    # the scalar ground-truth loop the vectorized path replaced
+    absent = np.array([not ocf.contains_key_exact(int(k)) for k in mixed])
+    hits = ocf.lookup(mixed)
+    assert measure_false_positives(ocf, mixed) == int(np.sum(hits & absent))
+    assert measure_false_negatives(ocf, inserted) == 0
+    present = ocf.contains_keys_exact(mixed)
+    np.testing.assert_array_equal(present, ~absent)
+
+
+@pytest.mark.tier1
+def test_keystore_contains_batch_duplicates_and_empty():
+    ks = VectorKeystore()
+    assert ks.contains_batch(np.array([1, 2], np.uint64)).tolist() == \
+        [False, False]
+    ks.add(np.array([5, 5, 9], np.uint64))
+    got = ks.contains_batch(np.array([9, 5, 7, 5, 0], np.uint64))
+    assert got.tolist() == [True, True, False, True, False]
+    ks.remove(np.array([5, 5], np.uint64))
+    assert ks.contains_batch(np.array([5], np.uint64)).tolist() == [False]
+
+
+# ---------------------------------------------------------- registry ----
+
+
+@pytest.mark.tier1
+def test_registry_counter_gauge_histogram():
+    m = MetricsRegistry()
+    m.counter("c").inc(2, kind="a")
+    m.counter("c").inc(kind="b")
+    assert m.counter("c").value(kind="a") == 2
+    m.gauge("g").set(3.0)
+    m.gauge("g").set_max(1.0)
+    assert m.gauge("g").value() == 3.0
+    h = m.histogram("h", buckets=(1, 2, 4))
+    h.observe(0.5)
+    h.observe(3)
+    h.observe(100)
+    h.observe_counts([1, 0, 0, 0])
+    s = h.series()[()]
+    assert s.counts == [2.0, 0.0, 1.0, 1.0]
+    with pytest.raises(ValueError):
+        m.histogram("h", buckets=(1, 2, 8))
+    with pytest.raises(TypeError):
+        m.gauge("c")
+    with pytest.raises(ValueError):
+        h.observe_counts([1, 2])
+
+
+@pytest.mark.tier1
+def test_registry_exports(tmp_path):
+    m = MetricsRegistry(ring_capacity=4)
+    m.counter("filter_waves").inc(3, kind="insert")
+    m.histogram("lat", buckets=(10, 100)).observe(42)
+    for i in range(6):
+        m.record_wave({"i": i})
+    # ring wrapped: only the last 4 records, in order
+    assert [r["i"] for r in m.ring.records()] == [2, 3, 4, 5]
+
+    path = tmp_path / "m.jsonl"
+    m.to_jsonl(str(path))
+    lines = [json.loads(ln) for ln in path.read_text().splitlines()]
+    assert any(ln.get("metric") == "filter_waves" for ln in lines)
+    assert sum(1 for ln in lines if ln["type"] == "wave") == 4
+
+    text = m.prometheus_text()
+    assert 'filter_waves_total{kind="insert"} 3.0' in text
+    assert 'lat_bucket{le="+Inf"} 1.0' in text
+    assert "# TYPE lat histogram" in text
+
+
+@pytest.mark.tier1
+def test_trace_recorder_perfetto_shape(tmp_path):
+    t = [0.0]
+
+    def clock():
+        t[0] += 0.001
+        return t[0]
+
+    tr = TraceRecorder(process_name="test", clock=clock)
+    with tr.span("outer", kind="insert"):
+        with tr.span("inner"):
+            pass
+    tr.instant("mark")
+    tr.counter("fill", table=0.5)
+    path = tmp_path / "trace.json"
+    tr.save(str(path))
+    doc = json.loads(path.read_text())
+    events = doc["traceEvents"]
+    names = [e["name"] for e in events]
+    assert "outer" in names and "inner" in names and "mark" in names
+    spans = [e for e in events if e.get("ph") == "X"]
+    assert all(e["dur"] > 0 for e in spans)
+    inner = next(e for e in events if e["name"] == "inner")
+    outer = next(e for e in events if e["name"] == "outer")
+    assert outer["ts"] <= inner["ts"]
+    assert outer["ts"] + outer["dur"] >= inner["ts"] + inner["dur"]
+    assert outer["args"]["kind"] == "insert"
+
+
+# ------------------------------------------------- merge properties -----
+#
+# NOT tier-1: hypothesis is an optional dev dependency.
+
+
+def test_telemetry_merge_associative_commutative():
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    from repro.kernels.telemetry import (FilterTelemetry, empty_telemetry,
+                                         merge)
+    import jax.numpy as jnp
+
+    def mk(vals):
+        u32 = lambda x: jnp.asarray(x, jnp.uint32)  # noqa: E731
+        return FilterTelemetry(
+            kick_hist=u32(vals[:8]), probe_depth=u32(vals[8:12]),
+            stash_spills=u32(vals[12]), stash_fill_hw=u32(vals[13]),
+            rollback_lanes=u32(vals[14]), selector_bumps=u32(vals[15]),
+            overflow_lanes=u32(vals[16]), table_deletes=u32(vals[17]),
+            stash_deletes=u32(vals[18]))
+
+    vec = st.lists(st.integers(min_value=0, max_value=2 ** 20),
+                   min_size=19, max_size=19)
+
+    @settings(max_examples=50, deadline=None)
+    @given(vec, vec, vec)
+    def check(a, b, c):
+        ta, tb, tc = mk(a), mk(b), mk(c)
+        left = merge(merge(ta, tb), tc)
+        right = merge(ta, merge(tb, tc))
+        for x, y in zip(left, right):
+            assert jnp.array_equal(x, y)
+        ab, ba = merge(ta, tb), merge(tb, ta)
+        for x, y in zip(ab, ba):
+            assert jnp.array_equal(x, y)
+        ea = merge(empty_telemetry(), ta)
+        for x, y in zip(ea, ta):
+            assert jnp.array_equal(x, y)
+
+    check()
