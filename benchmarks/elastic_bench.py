@@ -1,0 +1,148 @@
+"""Elastic resharding + recovery benchmark (ISSUE 10) — 4-device CPU mesh.
+
+Measures the zero-downtime control plane end to end and emits the
+``elastic_*`` recovery rows ``scripts/bench_gate.py`` enforces:
+
+  * a live 2->4 **split** through the full cutover protocol (pump held,
+    concurrent stream parked, migrate, retarget, drain) — migration
+    throughput (keys/s over the migration window), rounds, time-to-recover
+    (hold -> backlog drained), residual backlog, and false negatives on the
+    previously-acknowledged keys;
+  * the inverse 4->2 **merge** (the contended direction: two shards'
+    entries interleave into one, exercising eviction chains + stash spill
+    on the receive path);
+  * a **shard-loss recovery**: checkpoint, kill one shard, degraded-window
+    lookups (must be FN-free), restore from the snapshot — time-to-recover
+    for the restore.
+
+Run standalone (prints one JSON line, the filter_bench subprocess contract)
+or through ``filter_bench.elastic_rows``.  Migration jits are warmed with a
+throwaway split/merge at the same geometry so the timed runs measure the
+steady-state control plane, not trace time.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.checkpoint import ckpt  # noqa: E402
+from repro.core import distributed as dist  # noqa: E402
+from repro.core import hashing  # noqa: E402
+from repro.distributed import elastic, fault  # noqa: E402
+from repro.obs import MetricsRegistry, RecoveryMetrics  # noqa: E402
+from repro.serving.scheduler import DeferredWritePump  # noqa: E402
+
+NB, BS, FP, SS = 512, 4, 16, 128
+CF = 4.0
+N_KEYS = 3072
+N_CONCURRENT = 256
+
+
+def _keys(rng, n):
+    raw = rng.randint(0, 2**63, size=n, dtype=np.int64).astype(np.uint64)
+    return hashing.key_to_u32_pair_np(raw)
+
+
+def run() -> dict:
+    rng = np.random.RandomState(0)
+    m2 = elastic.filter_mesh(2)
+    m4 = elastic.filter_mesh(4)
+    hi, lo = _keys(rng, N_KEYS)
+
+    def fresh_pump(metrics=None, recovery=None):
+        pump = DeferredWritePump(
+            m2, "data", dist.make_sharded_state(2, NB, BS, stash_slots=SS),
+            fp_bits=FP, backend="jnp", donate=False, metrics=metrics,
+            route="pair", capacity_factor=CF)
+        pump.submit(hi, lo)
+        pump.run_until_drained()
+        assert pump.pending == 0 and pump.stats.failed == 0
+        return pump
+
+    # -- warmup: compile the migration round jits at this geometry --
+    warm = fresh_pump()
+    warm_state, _ = elastic.split_state(m4, "data", warm.state)
+    elastic.merge_state(m4, "data", warm_state)
+
+    # -- timed split through the full cutover protocol --
+    reg = MetricsRegistry()
+    rec = RecoveryMetrics(metrics=reg)
+    pump = fresh_pump(metrics=reg, recovery=rec)
+    ctrl = elastic.ElasticController(pump, axis="data", recovery=rec)
+    chi, clo = _keys(rng, N_CONCURRENT)
+    pump.hold()
+    pump.submit(chi, clo)             # concurrent stream: parks mid-cutover
+    t0 = time.perf_counter()
+    rep_split = ctrl.split(m4)
+    split_ttr = time.perf_counter() - t0
+    backlog_after = pump.pending
+
+    ahi = np.concatenate([hi, chi])
+    alo = np.concatenate([lo, clo])
+    hits, _ = dist.distributed_lookup(
+        m4, "data", pump.state, jnp.asarray(ahi), jnp.asarray(alo),
+        fp_bits=FP, backend="jnp", route="pair", capacity_factor=CF)
+    split_fns = int((~np.asarray(hits)).sum())
+
+    # -- timed merge (plain state path: the migration engine itself) --
+    rep_merge = ctrl.merge(m2)
+    hits2, _ = dist.distributed_lookup(
+        m2, "data", pump.state, jnp.asarray(ahi), jnp.asarray(alo),
+        fp_bits=FP, backend="jnp", route="pair", capacity_factor=CF)
+    merge_fns = int((~np.asarray(hits2)).sum())
+
+    # -- shard-loss recovery from a durable snapshot --
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save_sharded(d, 1, pump.state)
+        inj = fault.FaultInjector(recovery=rec)
+        dead = inj.kill(pump.state, 0)
+        dh, _, deg = fault.degraded_lookup(
+            m2, "data", dead, jnp.asarray(ahi), jnp.asarray(alo),
+            fp_bits=FP, injector=inj, backend="jnp", capacity_factor=CF,
+            route="pair", recovery=rec)
+        degraded_fns = int((~np.asarray(dh)).sum())
+        t0 = time.perf_counter()
+        healed = fault.recover_shard(dead, 0, ckpt_dir=d, injector=inj,
+                                     recovery=rec)
+        recover_s = time.perf_counter() - t0
+    rh, _ = dist.distributed_lookup(
+        m2, "data",
+        healed._replace(tables=jnp.asarray(healed.tables),
+                        stashes=jnp.asarray(healed.stashes)),
+        jnp.asarray(ahi), jnp.asarray(alo), fp_bits=FP, backend="jnp",
+        route="pair", capacity_factor=CF)
+    recover_fns = int((~np.asarray(rh)).sum())
+
+    return {
+        "elastic_split_keys_per_s": round(
+            rep_split.keys_moved / max(rep_split.seconds, 1e-9), 1),
+        "elastic_merge_keys_per_s": round(
+            rep_merge.keys_moved / max(rep_merge.seconds, 1e-9), 1),
+        "elastic_split_seconds": round(rep_split.seconds, 4),
+        "elastic_merge_seconds": round(rep_merge.seconds, 4),
+        "elastic_split_rounds": rep_split.rounds,
+        "elastic_merge_rounds": rep_merge.rounds,
+        "elastic_split_keys_moved": rep_split.keys_moved,
+        "elastic_merge_keys_moved": rep_merge.keys_moved,
+        "elastic_migration_failed": rep_split.failed + rep_merge.failed,
+        "elastic_time_to_recover_s": round(split_ttr, 4),
+        "elastic_shard_restore_s": round(recover_s, 4),
+        "elastic_deferred_backlog_after": int(backlog_after),
+        "elastic_split_false_negatives": split_fns,
+        "elastic_merge_false_negatives": merge_fns,
+        "elastic_degraded_false_negatives": degraded_fns,
+        "elastic_degraded_answers": int(np.asarray(deg).sum()),
+        "elastic_recover_false_negatives": recover_fns,
+    }
+
+
+if __name__ == "__main__":
+    print(json.dumps(run()))

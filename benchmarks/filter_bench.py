@@ -489,6 +489,32 @@ def distributed_rows():
     return rows, results
 
 
+def elastic_rows():
+    """Elastic resharding + recovery rows (ISSUE 10) — subprocess.
+
+    ``elastic_bench.py`` forces a 4-device host platform (same constraint
+    as ``distributed_bench.py``: must precede jax init) and measures the
+    full cutover protocol — live 2->4 split with a parked concurrent
+    stream, 4->2 merge, shard-loss recovery from a durable snapshot.
+    ``scripts/bench_gate.py`` enforces the recovery rows structurally:
+    zero false negatives in every phase, migration failures == 0, the
+    deferred backlog drained to exactly 0, and time-to-recover present
+    and positive.
+    """
+    script = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "elastic_bench.py")
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    out = subprocess.run([sys.executable, script], capture_output=True,
+                         text=True, timeout=1200, env=env)
+    if out.returncode != 0:
+        raise RuntimeError(f"elastic_bench failed:\n{out.stderr[-3000:]}")
+    results = json.loads(out.stdout.strip().splitlines()[-1])
+    rows = [(k, 0.0, v) for k, v in sorted(results.items())
+            if k.endswith("_keys_per_s") or k.endswith("_s")]
+    return rows, results
+
+
 def slo_rows(*, seed=0):
     """Latency-SLO scenario x percentile matrix (ISSUE 8).
 
@@ -515,7 +541,7 @@ def run(json_path: str | None = JSON_PATH):
         r, res = fn(rng)
         rows += r
         results.update(res)
-    for fn in (autotune_rows, distributed_rows, slo_rows):
+    for fn in (autotune_rows, distributed_rows, elastic_rows, slo_rows):
         r, res = fn()
         rows += r
         results.update(res)

@@ -141,6 +141,31 @@ def main() -> int:
         bad.append(f"  burst_train: default submit path p99 {dflt_p99} us "
                    f"fell behind the sync arm {sync_p99} us (same-run, "
                    f"limit +{SLO_THRESHOLD:.0%})")
+    # ISSUE-10 acceptance: elastic resharding recovery rows.  These are
+    # structural/correctness gates, not noise-tolerant thresholds: a
+    # migration that loses a key or strands a parked write is broken at any
+    # speed.  The elastic_*_keys_per_s rows additionally ride the generic
+    # regression threshold above.
+    for key in ("elastic_split_keys_per_s", "elastic_merge_keys_per_s",
+                "elastic_time_to_recover_s", "elastic_shard_restore_s",
+                "elastic_deferred_backlog_after",
+                "elastic_migration_failed"):
+        if fresh.get(key) is None:
+            bad.append(f"  {key}: recovery row missing from fresh bench")
+    for key in ("elastic_split_false_negatives",
+                "elastic_merge_false_negatives",
+                "elastic_degraded_false_negatives",
+                "elastic_recover_false_negatives",
+                "elastic_migration_failed",
+                "elastic_deferred_backlog_after"):
+        v = fresh.get(key)
+        if v is not None and v != 0:
+            bad.append(f"  {key}: {v} != 0 — elastic migration/recovery "
+                       f"must be lossless and fully drained")
+    ttr = fresh.get("elastic_time_to_recover_s")
+    if ttr is not None and not 0.0 < ttr < 600.0:
+        bad.append(f"  elastic_time_to_recover_s: {ttr} not in (0, 600)s "
+                   f"— must be reported and sane")
     # ISSUE-9 acceptance: telemetry must stay near-free on the wave path.
     # ``telemetry_overhead_pct`` compares the telemetry-on and -off arms of
     # the SAME mixed wave stream measured in the same run (fresh batcher per

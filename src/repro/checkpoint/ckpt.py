@@ -101,6 +101,52 @@ def restore(ckpt_dir: str, step: int, like_tree, *,
     return tree, manifest
 
 
+def save_sharded(ckpt_dir: str, step: int, state) -> str:
+    """Checkpoint a ``ShardedFilterState`` (durable fault-recovery snapshot).
+
+    Rides the generic leaf writer — tables (and stashes, when present) land
+    as .npy, the static ``n_buckets`` in the manifest extra — so the
+    atomic-rename/fsync crash discipline applies unchanged.  The sharded
+    stacks are gathered to host first (``np.asarray``), which is the point:
+    the snapshot must outlive the mesh it was taken on (a restore may land
+    on a replacement shard, or a differently-sized mesh after an elastic
+    resize).
+    """
+    tree = {"tables": np.asarray(state.tables)}
+    if state.stashes is not None:
+        tree["stashes"] = np.asarray(state.stashes)
+    extra = {"sharded_filter": {"n_buckets": state.n_buckets,
+                                "has_stashes": state.stashes is not None}}
+    return save(ckpt_dir, step, tree, extra=extra)
+
+
+def restore_sharded(ckpt_dir: str, step: Optional[int] = None):
+    """Restore a ``ShardedFilterState`` saved by ``save_sharded``.
+
+    ``step=None`` restores the latest durable snapshot.  Returns host-backed
+    (uncommitted) arrays, so the caller can drop the state onto whatever
+    mesh survives the fault.
+    """
+    from repro.core.distributed import ShardedFilterState
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    meta = manifest["extra"]["sharded_filter"]
+    like = {"tables": 0}
+    if meta["has_stashes"]:
+        like["stashes"] = 0
+    tree, _ = restore(ckpt_dir, step, like)
+    return ShardedFilterState(
+        tables=np.asarray(tree["tables"]),
+        stashes=(np.asarray(tree["stashes"]) if meta["has_stashes"]
+                 else None),
+        n_buckets=meta["n_buckets"])
+
+
 def restore_ocf(ckpt_dir: str, step: int, ocf: OCF) -> OCF:
     path = os.path.join(ckpt_dir, f"step_{step:08d}")
     keys = np.load(os.path.join(path, "ocf_keys.npy"))

@@ -136,7 +136,9 @@ def sharded_occupancy(state: ShardedFilterState) -> jax.Array:
     return live.astype(jnp.float32) / jnp.float32(state.tables.size)
 
 
-def _route(hi, lo, n_shards: int, cap: int, valid=None):
+def _route(hi, lo, n_shards: int, cap: int, valid=None, *,
+           route: str = "key", n_buckets: Optional[int] = None,
+           fp_bits: Optional[int] = None):
     """Owner routing for one source shard's lane batch.
 
     Returns (dst int32[N] — owner or n_shards for overflow, rank int32[N]
@@ -145,8 +147,18 @@ def _route(hi, lo, n_shards: int, cap: int, valid=None):
     original lane order — so answers scatter straight back by (dst, rank)
     with no argsort/inverse permutation.  Invalid lanes (``valid=False`` —
     resubmission padding) claim no capacity slot and never fit.
+
+    ``route`` picks the owner function: ``"key"`` hashes the raw key
+    (legacy, cheapest); ``"pair"`` hashes the key's candidate-pair
+    invariant (min bucket + fingerprint), the routing elastic resharding
+    requires — a stored slot's owner stays re-derivable after the key is
+    gone (``distributed/elastic.py``).
     """
-    owner = hashing.owner_shard(hi, lo, n_shards).astype(jnp.int32)
+    if route == "pair":
+        owner = hashing.owner_shard_key_pair(
+            hi, lo, n_buckets, fp_bits, n_shards).astype(jnp.int32)
+    else:
+        owner = hashing.owner_shard(hi, lo, n_shards).astype(jnp.int32)
     if valid is None:
         valid = jnp.ones(owner.shape, bool)
     rank = conflict_waves(owner, valid)
@@ -175,7 +187,8 @@ def _local_probe(table, hi, lo, fp_bits: int, backend: str = "auto"):
 
 def distributed_lookup(mesh: Mesh, axis: str, state: ShardedFilterState,
                        hi: jax.Array, lo: jax.Array, *, fp_bits: int,
-                       capacity_factor: float = 2.0, backend: str = "auto"):
+                       capacity_factor: float = 2.0, backend: str = "auto",
+                       route: str = "key"):
     """Batched membership across filter shards.
 
     ``hi``/``lo``: uint32[n_shards * per_shard] keys, sharded over ``axis``.
@@ -191,19 +204,25 @@ def distributed_lookup(mesh: Mesh, axis: str, state: ShardedFilterState,
     on TPU meshes whose shard tables fit the VMEM budget, jnp elsewhere
     (CPU hosts trace the jnp path unless "pallas" is forced, which runs the
     kernel in interpret mode — how the parity tests pin it).
+
+    ``route`` must match the routing the state was written with ("key" |
+    "pair" — see ``_route``); probing a pair-routed elastic state with key
+    routing sends keys to the wrong shard and silently false-negatives.
     """
     n_shards = mesh.shape[axis]
     per_shard = hi.shape[0] // n_shards
     cap = int(per_shard * capacity_factor / n_shards + 1)  # slots per (src,dst)
     has_stash = state.stashes is not None
     nb = state.n_buckets
+    route_nb = nb if nb is not None else state.tables.shape[1]
     fops = FilterOps(fp_bits=fp_bits, backend=backend)
 
     def shard_fn(tables, stashes, hi, lo):
         # tables: [1, buf, b] local shard; hi/lo: [per_shard]
         table = tables[0]
         stash = stashes[0] if has_stash else None
-        dst, rank, fits = _route(hi, lo, n_shards, cap)
+        dst, rank, fits = _route(hi, lo, n_shards, cap, route=route,
+                                 n_buckets=route_nb, fp_bits=fp_bits)
         overflow = jnp.sum(~fits, dtype=jnp.int32)
         buf_hi, buf_lo, valid = _scatter_routed(dst, rank, fits, n_shards,
                                                 cap, hi, lo)
@@ -248,7 +267,8 @@ def _routed_write_fn(mesh: Mesh, axis: str, op: str, n_shards: int,
                      cap: int, fp_bits: int, backend: str,
                      evict_rounds: Optional[int], max_disp: int,
                      schedule: bool, donate: bool,
-                     n_buckets: Optional[int], has_stash: bool):
+                     n_buckets: Optional[int], has_stash: bool,
+                     route: str, route_nb: int):
     """Build (and cache) the jitted routed-write executable.
 
     Cache key == every static that shapes the traced program; jax.jit
@@ -264,7 +284,9 @@ def _routed_write_fn(mesh: Mesh, axis: str, op: str, n_shards: int,
     def shard_fn(tables, stashes, hi, lo, lane_valid):
         table = tables[0]
         stash = stashes[0] if has_stash else None
-        dst, rank, fits = _route(hi, lo, n_shards, cap, lane_valid)
+        dst, rank, fits = _route(hi, lo, n_shards, cap, lane_valid,
+                                 route=route, n_buckets=route_nb,
+                                 fp_bits=fp_bits)
         overflow = jnp.sum(~fits & lane_valid, dtype=jnp.int32)
         buf_hi, buf_lo, valid = _scatter_routed(dst, rank, fits, n_shards,
                                                 cap, hi, lo)
@@ -302,14 +324,17 @@ def _distributed_write(op: str, mesh: Mesh, axis: str,
                        state: ShardedFilterState, hi, lo, *, fp_bits: int,
                        capacity_factor: float, backend: str,
                        evict_rounds: Optional[int], max_disp: int,
-                       schedule: bool, donate: bool, valid=None):
+                       schedule: bool, donate: bool, valid=None,
+                       route: str = "key"):
     n_shards = mesh.shape[axis]
     per_shard = hi.shape[0] // n_shards
     cap = int(per_shard * capacity_factor / n_shards + 1)
     has_stash = state.stashes is not None
+    route_nb = (state.n_buckets if state.n_buckets is not None
+                else state.tables.shape[1])
     fn = _routed_write_fn(mesh, axis, op, n_shards, cap, fp_bits, backend,
                           evict_rounds, max_disp, schedule, donate,
-                          state.n_buckets, has_stash)
+                          state.n_buckets, has_stash, route, route_nb)
     stashes = (state.stashes if has_stash else
                jnp.zeros((n_shards, 2, 1), jnp.uint32))  # dummy, threaded
     if valid is None:
@@ -326,7 +351,8 @@ def distributed_insert(mesh: Mesh, axis: str, state: ShardedFilterState,
                        capacity_factor: float = 2.0, backend: str = "auto",
                        evict_rounds: Optional[int] = None,
                        max_disp: int = 500, schedule: bool = True,
-                       donate: bool = False, valid=None):
+                       donate: bool = False, valid=None,
+                       route: str = "key"):
     """Routed bulk insert across filter shards, entirely on-device.
 
     ``hi``/``lo``: uint32[n_shards * per_shard] keys, sharded over ``axis``.
@@ -361,19 +387,25 @@ def distributed_insert(mesh: Mesh, axis: str, state: ShardedFilterState,
     never deferred) — what lets a resubmission pump pad a deferred batch
     to the sharded shape without inserting sentinel keys
     (``serving.scheduler.DeferredWritePump``).
+
+    ``route`` selects the owner function ("key" hashes the full key,
+    "pair" hashes the candidate bucket pair + fingerprint — elastic
+    states that must re-derive ownership from resident slots).  A state
+    must be written and probed under ONE routing mode for its lifetime.
     """
     return _distributed_write("insert", mesh, axis, state, hi, lo,
                               fp_bits=fp_bits,
                               capacity_factor=capacity_factor,
                               backend=backend, evict_rounds=evict_rounds,
                               max_disp=max_disp, schedule=schedule,
-                              donate=donate, valid=valid)
+                              donate=donate, valid=valid, route=route)
 
 
 def distributed_delete(mesh: Mesh, axis: str, state: ShardedFilterState,
                        hi: jax.Array, lo: jax.Array, *, fp_bits: int,
                        capacity_factor: float = 2.0, backend: str = "auto",
-                       donate: bool = False, valid=None):
+                       donate: bool = False, valid=None,
+                       route: str = "key"):
     """Routed verified delete across filter shards, entirely on-device.
 
     The write-side mirror of ``distributed_lookup``: each key deletes on
@@ -393,7 +425,7 @@ def distributed_delete(mesh: Mesh, axis: str, state: ShardedFilterState,
                               capacity_factor=capacity_factor,
                               backend=backend, evict_rounds=None,
                               max_disp=500, schedule=False, donate=donate,
-                              valid=valid)
+                              valid=valid, route=route)
 
 
 # ------------------------------------------------- compat shims (host) --

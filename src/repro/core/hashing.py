@@ -130,6 +130,45 @@ def owner_shard_np(hi: np.ndarray, lo: np.ndarray, n_shards: int) -> np.ndarray:
     return (h % np.uint32(n_shards)).astype(np.uint32)
 
 
+# Pair routing (elastic resharding).  A stored slot is only (bucket, fp) —
+# the key is gone — so a shard-owner function that must be re-evaluable
+# during a live split/merge can depend ONLY on invariants of the slot.  The
+# candidate pair {i, alt(i, fp)} is such an invariant (the additive
+# complement is an involution), and min(i, alt(i, fp)) + fp identifies it,
+# computable both at insert time (from the key's i1) and at migration time
+# (from whichever bucket the entry happens to reside in).  Any pair-owner
+# hash factors through exactly this: i + alt(i, fp) == H(fp) mod n_buckets,
+# so there is no more slot-derivable entropy to be had.
+_PAIR_C = np.uint32(0x27220A95)
+
+
+def owner_shard_pair_np(bucket: np.ndarray, fp: np.ndarray, n_buckets: int,
+                        n_shards: int) -> np.ndarray:
+    """Owner shard of a stored (bucket, fingerprint) pair — key-free.
+
+    Because the hash is independent of ``n_shards`` (only the final mod
+    changes), power-of-two shard counts nest: ``owner(2n) mod n ==
+    owner(n)``, so a split moves every entry of shard ``s`` to ``s`` or
+    ``s + n`` and a merge folds ``s + n`` back onto ``s``.
+    """
+    b = np.asarray(bucket, dtype=np.uint32) % np.uint32(n_buckets)
+    alt = alt_index_np(b, np.asarray(fp, np.uint32), n_buckets)
+    lo_b = np.minimum(b, alt)
+    with np.errstate(over="ignore"):
+        h = murmur3_mix_np(splitmix32_np(lo_b)
+                           ^ murmur3_mix_np((np.asarray(fp, np.uint32)
+                                             + _PAIR_C).astype(np.uint32)))
+    return (h % np.uint32(n_shards)).astype(np.uint32)
+
+
+def owner_shard_key_pair_np(hi: np.ndarray, lo: np.ndarray, n_buckets: int,
+                            fp_bits: int, n_shards: int) -> np.ndarray:
+    """Pair-routing owner computed from a live key (the insert-time side)."""
+    fp = fingerprint_np(hi, lo, fp_bits)
+    i1 = index_hash_np(hi, lo, n_buckets)
+    return owner_shard_pair_np(i1, fp, n_buckets, n_shards)
+
+
 # ------------------------------------------------------------------ jax ----
 
 
@@ -210,6 +249,25 @@ def alt_index_dyn(i: jax.Array, fp: jax.Array, n_buckets) -> jax.Array:
 def owner_shard(hi: jax.Array, lo: jax.Array, n_shards: int) -> jax.Array:
     h = murmur3_mix(splitmix32(lo) + hi)
     return h % jnp.uint32(n_shards)
+
+
+def owner_shard_pair(bucket: jax.Array, fp: jax.Array, n_buckets: int,
+                     n_shards: int) -> jax.Array:
+    """jnp twin of ``owner_shard_pair_np`` (bit-identical)."""
+    b = bucket.astype(jnp.uint32) % jnp.uint32(n_buckets)
+    alt = alt_index(b, fp.astype(jnp.uint32), n_buckets)
+    lo_b = jnp.minimum(b, alt)
+    h = murmur3_mix(splitmix32(lo_b)
+                    ^ murmur3_mix(fp.astype(jnp.uint32) + jnp.uint32(_PAIR_C)))
+    return h % jnp.uint32(n_shards)
+
+
+def owner_shard_key_pair(hi: jax.Array, lo: jax.Array, n_buckets: int,
+                         fp_bits: int, n_shards: int) -> jax.Array:
+    """jnp twin of ``owner_shard_key_pair_np``."""
+    fp = fingerprint(hi, lo, fp_bits)
+    i1 = index_hash(hi, lo, n_buckets)
+    return owner_shard_pair(i1, fp, n_buckets, n_shards)
 
 
 def key_to_u32_pair(keys: jax.Array) -> tuple[jax.Array, jax.Array]:

@@ -1,16 +1,34 @@
-"""Fault tolerance & straggler mitigation (host-side control plane).
+"""Fault tolerance: injection, degraded serving, and recovery (host control
+plane).
 
 On a real multi-pod fleet these hooks wire into the cluster scheduler; in
-this repo they are fully functional against simulated failures (tests inject
-exceptions / slow steps) and drive the same code paths a production run
-would: checkpoint-restart, straggler detection, and bounded retry.
+this repo they are fully functional against simulated failures and drive
+the same code paths a production run would:
+
+  * ``FaultInjector`` kills / corrupts / delays a filter shard inside a
+    test — the chaos half of the story;
+  * ``degraded_lookup`` keeps answering while a shard is down, degrading
+    to the cuckoo filter's one safe direction: a key owned by a lost shard
+    answers "maybe present" (a conservative positive), NEVER a false
+    negative — the same contract routing overflow already has, extended to
+    whole-shard loss;
+  * ``recover_shard`` re-populates the lost shard from the last durable
+    ``checkpoint.ckpt.save_sharded`` snapshot and closes the degraded
+    window;
+  * ``retry_routed_write`` / ``run_with_restarts`` bound the retry story
+    (monotone backoff, exhaustion re-raises);
+  * ``StragglerWatchdog`` flags slow steps and feeds the registry gauges
+    the elastic controller reads.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import logging
 import time
 from typing import Callable, Optional
+
+import numpy as np
 
 log = logging.getLogger("repro.fault")
 
@@ -23,19 +41,31 @@ class StragglerWatchdog:
     feeds the elastic controller (drop/replace the host) or, for data
     stragglers, triggers OCF-level mitigation (shrink that node's filter
     capacity so rebuild bursts shorten — the paper's premature-flush story).
+
+    With a ``metrics`` registry attached, every observation updates
+    ``straggler_last_ratio`` / ``straggler_median_s`` gauges and each flag
+    increments ``straggler_flagged`` — so a dashboard sees the slow host,
+    not just the log line.
     """
 
     factor: float = 3.0
     history: int = 64
     _times: list = dataclasses.field(default_factory=list)
     flagged: int = 0
+    metrics: Optional[object] = None    # repro.obs.MetricsRegistry
 
     def observe(self, step_seconds: float) -> bool:
         times = sorted(self._times[-self.history:])
         median = times[len(times) // 2] if times else None
         self._times.append(step_seconds)
+        if median is not None and self.metrics is not None:
+            self.metrics.gauge("straggler_median_s").set(median)
+            self.metrics.gauge("straggler_last_ratio").set(
+                step_seconds / median if median > 0 else 0.0)
         if median is not None and step_seconds > self.factor * median:
             self.flagged += 1
+            if self.metrics is not None:
+                self.metrics.counter("straggler_flagged").inc()
             log.warning("straggler: step %.3fs vs median %.3fs",
                         step_seconds, median)
             return True
@@ -71,3 +101,194 @@ def run_with_restarts(make_state: Callable[[Optional[int]], tuple],
             log.warning("step failed (%s); restart %d/%d from ckpt %s",
                         e, restarts, policy.max_restarts, latest_step_fn())
             time.sleep(policy.backoff_s * restarts)
+
+
+def retry_routed_write(attempt: Callable[[], object], policy: RestartPolicy,
+                       *, sleep: Callable[[float], None] = time.sleep):
+    """Bounded retry-with-backoff around one routed write attempt.
+
+    ``attempt`` is a zero-arg closure over (mesh, state, batch) — typically
+    ``lambda: pump.submit(hi, lo)``.  Transient faults (an injected shard
+    failure, a collective timeout) retry with monotone backoff
+    ``backoff_s * failures``; after ``max_restarts`` failures the last
+    exception re-raises — routed writes must never retry forever, the
+    deferred-pump queue is the correct parking lot for longer outages.
+    """
+    failures = 0
+    while True:
+        try:
+            return attempt()
+        except Exception:  # noqa: BLE001 — injected faults are plain raises
+            failures += 1
+            if failures > policy.max_restarts:
+                raise
+            sleep(policy.backoff_s * failures)
+
+
+# ----------------------------------------------------- fault injection --
+
+
+class InjectedFault(RuntimeError):
+    """Raised by injector-wrapped callables to simulate a node failure."""
+
+
+class FaultInjector:
+    """Kill / corrupt / delay filter shards inside tests.
+
+    Tracks which shards are *lost* (killed or corrupted and not yet
+    healed); ``degraded_lookup`` consults that set to answer the lost
+    shards' keys conservatively.  All mutations are host-side on purpose —
+    a real failure destroys device state, and modeling it as "the rows are
+    garbage/zero and the control plane knows" is exactly what the recovery
+    path must handle.
+    """
+
+    def __init__(self, recovery=None):
+        self.lost: set[int] = set()
+        self.recovery = recovery    # optional obs.recovery.RecoveryMetrics
+
+    def _mark(self, kind: str, shard: int):
+        self.lost.add(int(shard))
+        if self.recovery is not None:
+            self.recovery.fault(kind, int(shard))
+
+    def kill(self, state, shard: int):
+        """Zero one shard's table+stash rows (node gone, memory gone)."""
+        tables = np.asarray(state.tables).copy()
+        tables[shard] = 0
+        stashes = None
+        if state.stashes is not None:
+            stashes = np.asarray(state.stashes).copy()
+            stashes[shard] = 0
+        self._mark("kill", shard)
+        return state._replace(tables=tables, stashes=stashes)
+
+    def corrupt(self, state, shard: int, seed: int = 0):
+        """Scramble one shard's rows (bit flips — worse than death: the
+        shard still answers, wrongly, until the control plane notices)."""
+        rng = np.random.default_rng(seed)
+        tables = np.asarray(state.tables).copy()
+        tables[shard] = rng.integers(0, 2**32, tables[shard].shape,
+                                     dtype=np.uint32)
+        stashes = None
+        if state.stashes is not None:
+            stashes = np.asarray(state.stashes).copy()
+        self._mark("corrupt", shard)
+        return state._replace(tables=tables, stashes=stashes)
+
+    def delay(self, fn: Callable, seconds: float) -> Callable:
+        """Wrap ``fn`` with a fixed sleep — the straggler injector."""
+        @functools.wraps(fn)
+        def slow(*a, **kw):
+            time.sleep(seconds)
+            return fn(*a, **kw)
+        return slow
+
+    def failing(self, fn: Callable, times: int) -> Callable:
+        """Wrap ``fn`` to raise ``InjectedFault`` on its first ``times``
+        calls, then pass through — the retry-loop test double."""
+        remaining = [times]
+
+        @functools.wraps(fn)
+        def flaky(*a, **kw):
+            if remaining[0] > 0:
+                remaining[0] -= 1
+                raise InjectedFault(
+                    f"injected failure ({remaining[0]} more)")
+            return fn(*a, **kw)
+        return flaky
+
+    def heal(self, shard: int):
+        self.lost.discard(int(shard))
+
+
+# ------------------------------------------------- degraded-mode serving --
+
+
+def degraded_lookup(mesh, axis: str, state, hi, lo, *, fp_bits: int,
+                    injector: FaultInjector, route: str = "key",
+                    capacity_factor: float = 2.0, backend: str = "auto",
+                    recovery=None):
+    """``distributed_lookup`` that survives lost shards.
+
+    Runs the normal routed probe, then overrides every lane whose OWNER
+    shard is in the injector's lost set to True — "maybe present".  That
+    is the only safe degradation a membership filter has: the lost shard's
+    keys cannot be disproven, so claiming absence would be a false
+    negative (the one error class the filter contract forbids), while a
+    conservative positive merely costs the caller a backing-store read.
+    Surviving shards' answers are untouched — bit-identical to the
+    healthy path.
+
+    Returns ``(hits, overflow, degraded bool[N])`` where ``degraded``
+    marks the conservative answers; ``recovery.degraded`` counts them so
+    the degraded window is visible in the exported metrics.
+    """
+    from repro.core import hashing
+    from repro.core.distributed import distributed_lookup
+    hits, overflow = distributed_lookup(
+        mesh, axis, state, hi, lo, fp_bits=fp_bits,
+        capacity_factor=capacity_factor, backend=backend, route=route)
+    n_shards = mesh.shape[axis]
+    hi_np = np.asarray(hi, np.uint32)
+    lo_np = np.asarray(lo, np.uint32)
+    if route == "pair":
+        nb = (state.n_buckets if state.n_buckets is not None
+              else state.tables.shape[1])
+        owner = hashing.owner_shard_key_pair_np(hi_np, lo_np, nb, fp_bits,
+                                                n_shards)
+    else:
+        owner = hashing.owner_shard_np(hi_np, lo_np, n_shards)
+    degraded = np.isin(owner, np.fromiter(injector.lost, np.uint32,
+                                          len(injector.lost)))
+    out = np.asarray(hits) | degraded
+    if recovery is not None:
+        recovery.degraded(int(degraded.sum()))
+    return out, overflow, degraded
+
+
+def recover_shard(state, shard: int, *, ckpt_dir: str,
+                  step: Optional[int] = None,
+                  injector: Optional[FaultInjector] = None, recovery=None):
+    """Re-populate one lost shard from the last durable snapshot.
+
+    Restores ``save_sharded``'s host-backed copy, grafts the lost shard's
+    table+stash rows into the live state (surviving shards keep their
+    CURRENT rows — writes since the snapshot must not roll back), heals
+    the injector, and reports time-to-recover.  Keys the lost shard
+    accepted after the snapshot are gone — their degraded window ends with
+    a re-insert from the keystore/WAL upstream, which is out of filter
+    scope; everything up to the snapshot answers exactly again.
+    """
+    from repro.checkpoint.ckpt import restore_sharded
+    t0 = time.perf_counter()
+    ctx = (recovery.span("recover_shard", shard=int(shard))
+           if recovery is not None else _NULL)
+    with ctx:
+        snap = restore_sharded(ckpt_dir, step)
+        tables = np.asarray(state.tables).copy()
+        tables[shard] = np.asarray(snap.tables)[shard]
+        stashes = None
+        if state.stashes is not None:
+            stashes = np.asarray(state.stashes).copy()
+            if snap.stashes is not None:
+                stashes[shard] = np.asarray(snap.stashes)[shard]
+            else:
+                stashes[shard] = 0
+        if injector is not None:
+            injector.heal(shard)
+    new_state = state._replace(tables=tables, stashes=stashes)
+    if recovery is not None:
+        recovery.recovered("shard_restore", time.perf_counter() - t0)
+    return new_state
+
+
+class _NullCtx:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *exc):
+        return False
+
+
+_NULL = _NullCtx()

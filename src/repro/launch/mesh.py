@@ -10,7 +10,16 @@ from __future__ import annotations
 
 import jax
 
-AXIS_AUTO = jax.sharding.AxisType.Auto
+
+def _axis_kwargs(n_axes: int) -> dict:
+    """``axis_types=`` for make_mesh, or {} on jax lines without AxisType
+    (0.4.x — where Auto is the only behavior anyway).  Same compat shim as
+    ``distributed.elastic._axis_type_kwargs``; duplicated here because this
+    module must stay import-light (no repro.distributed dependency)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -25,7 +34,7 @@ def make_production_mesh(*, multi_pod: bool = False):
             f"mesh {shape} needs {need} devices, have {len(devs)} — run via "
             f"launch/dryrun.py (it sets xla_force_host_platform_device_count)")
     return jax.make_mesh(shape, axes, devices=devs[:need],
-                         axis_types=(AXIS_AUTO,) * len(shape))
+                         **_axis_kwargs(len(shape)))
 
 
 def make_test_mesh(data: int = 2, model: int = 2, pod: int | None = None):
@@ -36,4 +45,4 @@ def make_test_mesh(data: int = 2, model: int = 2, pod: int | None = None):
     for s in shape:
         need *= s
     return jax.make_mesh(shape, axes, devices=jax.devices()[:need],
-                         axis_types=(AXIS_AUTO,) * len(shape))
+                         **_axis_kwargs(len(shape)))

@@ -7,9 +7,10 @@ Chrome-trace span recorder.  Everything here is optional-by-default:
 components accept ``metrics=None`` / ``tracer=None`` and do no
 observability work unless handed one.
 """
+from repro.obs.recovery import RecoveryMetrics
 from repro.obs.registry import (Counter, Gauge, Histogram, MetricsRegistry,
                                 RingBuffer)
 from repro.obs.trace import TraceRecorder
 
 __all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry",
-           "RingBuffer", "TraceRecorder"]
+           "RecoveryMetrics", "RingBuffer", "TraceRecorder"]

@@ -292,7 +292,8 @@ class DeferredWritePump:
 
     def __init__(self, mesh, axis: str, state, *, fp_bits: int,
                  admission=None, capacity_factor: float = 2.0,
-                 backend: str = "auto", donate: bool = True, metrics=None):
+                 backend: str = "auto", donate: bool = True, metrics=None,
+                 tracer=None, route: str = "key"):
         from repro.core.distributed import distributed_insert
         from repro.streaming.admission import AdmissionController
         self.mesh, self.axis = mesh, axis
@@ -302,6 +303,8 @@ class DeferredWritePump:
         self.backend = backend
         self.donate = donate
         self.metrics = metrics
+        self.tracer = tracer
+        self.route = route
         self._insert = distributed_insert
         self.admission = admission or AdmissionController(
             filt=ShardedFilterFills(lambda: self.state), metrics=metrics)
@@ -309,10 +312,42 @@ class DeferredWritePump:
         self._pend_hi = np.empty((0,), np.uint32)
         self._pend_lo = np.empty((0,), np.uint32)
         self.stats = PumpStats()
+        self.held = False
 
     @property
     def pending(self) -> int:
         return int(self._pend_hi.size)
+
+    def _span(self, name: str, **args):
+        if self.tracer is None:
+            return contextlib.nullcontext()
+        return self.tracer.span(name, **args)
+
+    # ------------------------------------------ elastic cutover hooks --
+
+    def hold(self):
+        """Park ALL traffic (fresh submits included) until ``release``.
+
+        The elastic controller brackets a migration with hold/release: a
+        routed insert issued mid-migration would race the all_to_all
+        streams (and target the wrong mesh after cutover), so during the
+        window every offered lane goes straight to the pending queue.
+        """
+        self.held = True
+
+    def release(self):
+        self.held = False
+
+    def retarget(self, mesh, axis: str, state):
+        """Point the pump at a new (mesh, axis, state) — the cutover step.
+
+        The parked backlog survives verbatim (host-side uint32 arrays carry
+        no mesh commitment) and drains through the new mesh's routed path
+        on the next ``pump``.
+        """
+        self.mesh, self.axis = mesh, axis
+        self.state = state
+        self.n_shards = mesh.shape[axis]
 
     def _attempt(self, hi: np.ndarray, lo: np.ndarray):
         """One routed insert over a host batch, padded to the shard shape."""
@@ -326,7 +361,8 @@ class DeferredWritePump:
             self.mesh, self.axis, self.state, jnp.asarray(hi),
             jnp.asarray(lo), fp_bits=self.fp_bits,
             capacity_factor=self.capacity_factor, backend=self.backend,
-            donate=self.donate, valid=jnp.asarray(valid))
+            donate=self.donate, valid=jnp.asarray(valid),
+            route=self.route)
         ok, deferred = np.asarray(ok), np.asarray(deferred)
         self._pend_hi = np.concatenate([self._pend_hi, hi[deferred]])
         self._pend_lo = np.concatenate([self._pend_lo, lo[deferred]])
@@ -347,10 +383,17 @@ class DeferredWritePump:
 
         Deferred lanes are parked for ``pump``; the batch must divide the
         shard count (the ``distributed_insert`` contract for fresh traffic).
+        While ``held`` (elastic migration window) the batch parks whole —
+        nothing inserted, everything deferred — and replays after cutover.
         """
         hi = np.asarray(hi, np.uint32)
         lo = np.asarray(lo, np.uint32)
         self.stats.submitted += int(hi.size)
+        if self.held:
+            self._pend_hi = np.concatenate([self._pend_hi, hi])
+            self._pend_lo = np.concatenate([self._pend_lo, lo])
+            self.stats.deferred += int(hi.size)
+            return (np.zeros(hi.size, bool), np.ones(hi.size, bool))
         return self._attempt(hi, lo)
 
     def pump(self) -> int:
@@ -363,7 +406,7 @@ class DeferredWritePump:
         """
         if not self.pending:
             return 0
-        if not self.admission.peek():
+        if self.held or not self.admission.peek():
             self.stats.held_ticks += 1
             if self.metrics is not None:
                 self.metrics.counter("pump_held_ticks").inc()
@@ -374,7 +417,8 @@ class DeferredWritePump:
         self.stats.resubmitted += int(hi.size)
         if self.metrics is not None:
             self.metrics.counter("pump_resubmitted_lanes").inc(int(hi.size))
-        self._attempt(hi, lo)
+        with self._span("pump_resubmit", lanes=int(hi.size)):
+            self._attempt(hi, lo)
         return int(hi.size)
 
     def run_until_drained(self, *, max_ticks: int = 100,

@@ -73,6 +73,10 @@ class AdmissionController:
     # Optional repro.obs.MetricsRegistry: trip/readmit transitions become
     # counters, the congestion reading a pair of gauges.  None = free.
     metrics: Optional[object] = None
+    # Hard gate for control-plane windows (elastic cutover): while frozen,
+    # peek()/admit() answer False without reading the signal — the filter
+    # state is mid-migration and fills() may straddle two meshes.
+    frozen: bool = False
 
     def signal(self) -> float:
         """Current congestion in [0, ~1] (one stacked device read)."""
@@ -90,6 +94,8 @@ class AdmissionController:
         state but NOT the admitted/deferred counters — the side-effect-free
         form pollers (the scheduler's deferred-queue drain) must use, so
         the counters keep meaning *per-request decisions*."""
+        if self.frozen:
+            return False
         s = self.signal()
         if self.tripped:
             if s <= self.config.low_water:
@@ -101,6 +107,15 @@ class AdmissionController:
             if self.metrics is not None:
                 self.metrics.counter("admission_trips").inc()
         return not self.tripped
+
+    def freeze(self):
+        """Deny all admissions until ``thaw`` — no signal read, no
+        hysteresis transition.  The elastic controller brackets a migration
+        window with freeze/thaw so nothing races the shard cutover."""
+        self.frozen = True
+
+    def thaw(self):
+        self.frozen = False
 
     def admit(self) -> bool:
         """One per-request admission decision, with hysteresis + counters."""
